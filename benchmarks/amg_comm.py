@@ -1,0 +1,82 @@
+"""Shared AMG communication-benchmark substrate.
+
+Builds the paper's workload once per process: rotated anisotropic diffusion
+(theta=45deg, eps=1e-3) -> classical AMG hierarchy -> per-level SpMV
+communication patterns for a given process count -> plans for every
+strategy.  Message counts/bytes are EXACT plan quantities; network *times*
+are modeled (locality-aware max-rate, core.costmodel) because this
+container has no network — both are labeled in the output.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.amg import build_hierarchy, diffusion_2d
+from repro.core import (
+    LASSEN,
+    Topology,
+    build_plan,
+    plan_time,
+)
+from repro.core.costmodel import step_time
+from repro.sparse import partition_csr
+
+PROCS_PER_REGION = 16          # paper: 16 cores/CPU used per Lassen node
+VALUE_BYTES = 8                # double-precision vector entries
+
+STRATEGIES = ("standard", "partial", "full")
+
+
+@functools.lru_cache(maxsize=8)
+def hierarchy_for(rows: int):
+    ny, nx = _grid(rows)
+    A = diffusion_2d(ny, nx)
+    return build_hierarchy(A)
+
+
+def _grid(rows: int) -> Tuple[int, int]:
+    nx = 1 << int(np.ceil(np.log2(np.sqrt(rows))))
+    ny = max(1, rows // nx)
+    return ny, nx
+
+
+@functools.lru_cache(maxsize=64)
+def level_patterns(rows: int, n_procs: int):
+    """[(pattern, n_level_rows)] per AMG level with >= n_procs rows."""
+    h = hierarchy_for(rows)
+    out = []
+    for lvl in h.levels:
+        if lvl.A.nrows < n_procs:
+            break
+        part = partition_csr(lvl.A, n_procs)
+        out.append((part.pattern, lvl.A.nrows))
+    return out
+
+
+@functools.lru_cache(maxsize=256)
+def level_plans(rows: int, n_procs: int):
+    """{strategy: [(plan, build_seconds)] per level}."""
+    topo = Topology(n_procs, min(PROCS_PER_REGION, n_procs))
+    pats = level_patterns(rows, n_procs)
+    out: Dict[str, List] = {}
+    for strat in STRATEGIES:
+        rows_out = []
+        for pattern, _n in pats:
+            t0 = time.perf_counter()
+            plan = build_plan(pattern, topo, strat, value_bytes=VALUE_BYTES)
+            rows_out.append((plan, time.perf_counter() - t0))
+        out[strat] = rows_out
+    return out
+
+
+def modeled_level_times(rows: int, n_procs: int, params=LASSEN):
+    """{strategy: [seconds per level]} (modeled)."""
+    plans = level_plans(rows, n_procs)
+    return {
+        s: [plan_time(p, params) for p, _ in plans[s]]
+        for s in STRATEGIES
+    }

@@ -1,0 +1,92 @@
+"""Aggregate dry-run cell JSONs into the roofline table (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(include_variants: bool = True) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        is_variant = len(parts) > 3
+        if is_variant and not include_variants:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        d["_variant"] = "__".join(parts[3:]) if is_variant else ""
+        cells.append(d)
+    return cells
+
+
+def rows():
+    out = []
+    for c in load_cells():
+        tag = f"{c.get('arch')}/{c.get('shape')}/{c.get('mesh')}"
+        if c.get("_variant"):
+            tag += f"/{c['_variant']}"
+        if c.get("status") == "skipped":
+            out.append((f"roofline/{tag}", 0.0,
+                        "kind=skip|" + c.get("reason", "")[:60]))
+            continue
+        if c.get("status") != "ok":
+            out.append((f"roofline/{tag}", 0.0, "kind=ERROR"))
+            continue
+        extra = ""
+        dci = c.get("ici_dci_bytes_per_device")
+        if dci:
+            extra = (f"|dci_bytes={dci['dci']:.3g}"
+                     f"|ici_bytes={dci['ici']:.3g}")
+        out.append((
+            f"roofline/{tag}",
+            c["step_s_lower_bound"] * 1e6,
+            "kind=dryrun-roofline"
+            f"|bottleneck={c['bottleneck']}"
+            f"|compute_us={c['compute_s'] * 1e6:.0f}"
+            f"|memory_us={c['memory_s'] * 1e6:.0f}"
+            f"|collective_us={c['collective_s'] * 1e6:.0f}"
+            f"|useful_flops={c['useful_flops_ratio']:.2f}"
+            f"|fits_v5e={c.get('memory_analytic', {}).get('fits_16gb_v5e')}"
+            + extra,
+        ))
+    return out
+
+
+def markdown_table(include_variants: bool = False) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bound | useful | fits v5e |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(include_variants=include_variants):
+        v = f" `{c['_variant']}`" if c.get("_variant") else ""
+        if c.get("status") == "skipped":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']}{v} | — | — | — "
+                f"| *skip: sub-quadratic attention required* | — | — |"
+            )
+            continue
+        if c.get("status") != "ok":
+            lines.append(
+                f"| {c.get('arch')} | {c.get('shape')} | {c.get('mesh')}{v} "
+                f"| — | — | — | ERROR | — | — |"
+            )
+            continue
+        fits = c.get("memory_analytic", {}).get("fits_16gb_v5e", "?")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']}{v} "
+            f"| {c['compute_s']:.4f} | {c['memory_s']:.4f} "
+            f"| {c['collective_s']:.4f} | {c['bottleneck']} "
+            f"| {c['useful_flops_ratio']:.2f} | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown_table(include_variants="--variants" in sys.argv))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure + roofline report.
+
+Prints ``name,us_per_call,derived`` CSV.  Network times are *modeled*
+(locality-aware max-rate, Lassen parameters) — message counts and bytes are
+exact plan quantities; rows are tagged with kind=measured-host /
+modeled-lassen / exact-plan / dryrun-roofline accordingly.
+
+    PYTHONPATH=src python -m benchmarks.run            # full paper problem
+    REPRO_BENCH_ROWS=65536 ... python -m benchmarks.run  # smaller/faster
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    rows = int(os.environ.get("REPRO_BENCH_ROWS", 524_288))
+    t_start = time.time()
+    from . import paper_figs, roofline_report
+
+    sections = [
+        ("fig6", lambda: paper_figs.fig6_graph_creation(rows)),
+        ("fig7", lambda: paper_figs.fig7_crossover(rows)),
+        ("fig8_9", lambda: paper_figs.fig8_9_message_counts(rows)),
+        ("fig10", lambda: paper_figs.fig10_message_sizes(rows)),
+        ("fig11", lambda: paper_figs.fig11_per_level_cost(rows)),
+        ("fig12", lambda: paper_figs.fig12_strong_scaling(rows)),
+        ("fig13", lambda: paper_figs.fig13_weak_scaling()),
+        ("amg", paper_figs.amg_solver_convergence),
+        ("roofline", roofline_report.rows),
+    ]
+    print("name,us_per_call,derived")
+    for section, fn in sections:
+        t0 = time.time()
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{section}/ERROR,0.00,kind=ERROR|{type(e).__name__}:"
+                  f"{str(e)[:120]}")
+        sys.stdout.flush()
+        print(f"# section {section} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end driver (the paper's workload): rotated anisotropic diffusion
+-> classical AMG -> solve, with every level's SpMV halo exchange executed
+through locality-aware persistent neighborhood collectives, exactly like
+the Hypre + MPI Advance integration the paper evaluates.
+
+    PYTHONPATH=src python examples/amg_solve.py --rows 65536 --procs 256
+    PYTHONPATH=src python examples/amg_solve.py --rows 524288 --procs 2048  # paper scale
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.amg import build_hierarchy, diffusion_2d
+from repro.amg.hierarchy import chebyshev, v_cycle
+from repro.core import LASSEN, NeighborAlltoallV, Topology
+from repro.sparse import distributed_spmv_numpy, partition_csr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=65_536)
+    ap.add_argument("--procs", type=int, default=256)
+    ap.add_argument("--procs-per-region", type=int, default=16)
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "standard", "partial", "full"])
+    ap.add_argument("--iters", type=int, default=30)
+    args = ap.parse_args()
+
+    nx = 1 << int(np.ceil(np.log2(np.sqrt(args.rows))))
+    ny = args.rows // nx
+    print(f"[amg] assembling {ny}x{nx} rotated anisotropic diffusion "
+          f"(theta=45deg, eps=1e-3)")
+    A = diffusion_2d(ny, nx)
+    t0 = time.time()
+    h = build_hierarchy(A)
+    print(f"[amg] setup {time.time() - t0:.1f}s\n{h.describe()}")
+
+    topo = Topology(args.procs, min(args.procs_per_region, args.procs))
+    print(f"\n[comm] {args.procs} processes in {topo.n_regions} regions; "
+          f"persistent neighborhood collectives per level "
+          f"(strategy={args.strategy}):")
+    colls = []
+    parts = []
+    total_modeled = {"standard": 0.0, "chosen": 0.0}
+    for lvl, level in enumerate(h.levels):
+        if level.A.nrows < args.procs:
+            break
+        part = partition_csr(level.A, args.procs)
+        coll = NeighborAlltoallV.init(part.pattern, topo, args.strategy)
+        parts.append(part)
+        colls.append(coll)
+        from repro.core import build_plan, plan_time
+        std = plan_time(build_plan(part.pattern, topo, "standard"), LASSEN)
+        mine = coll.modeled_time(LASSEN)
+        total_modeled["standard"] += std
+        total_modeled["chosen"] += min(std, mine)
+        t = coll.plan.stats.totals()
+        print(f"  L{lvl}: strategy={coll.strategy:8s} "
+              f"inter_msgs={t['inter_msgs']:6d} "
+              f"inter_bytes={t['inter_bytes']:9d} "
+              f"modeled={mine * 1e6:7.1f}us (standard {std * 1e6:7.1f}us)")
+    sp = total_modeled["standard"] / max(total_modeled["chosen"], 1e-12)
+    print(f"[comm] modeled per-iteration speedup over standard: {sp:.2f}x")
+
+    # solve, with the fine-level SpMV residual computed through the
+    # distributed halo-exchange path (verifying the collective inside the
+    # solver loop, Hypre-style)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=A.nrows)
+    x = np.zeros_like(b)
+    nb = np.linalg.norm(b)
+    t0 = time.time()
+    for it in range(args.iters):
+        r_dist = b - distributed_spmv_numpy(parts[0], colls[0].plan, x)
+        rn = np.linalg.norm(r_dist) / nb
+        if it % 5 == 0 or rn < 1e-8:
+            print(f"[solve] iter {it:3d} rel_res={rn:.3e}")
+        if rn < 1e-8:
+            break
+        x = x + v_cycle(h, r_dist)
+    print(f"[solve] {time.time() - t0:.1f}s; final rel_res="
+          f"{np.linalg.norm(b - A.matvec(x)) / nb:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's three neighborhood collectives in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    CommPattern,
+    NeighborAlltoallV,
+    Topology,
+    build_plan,
+)
+
+# 16 processes in 4 regions of 4 (think: 4 pods of 4 chips)
+topo = Topology(n_procs=16, procs_per_region=4)
+
+# an irregular pattern: every process owns 8 values; each needs a random
+# subset of remote values (this is exactly what a SpMV halo exchange or a
+# MoE dispatch looks like to the collective)
+rng = np.random.default_rng(0)
+n_per = 8
+offsets = np.arange(17) * n_per
+needs = [
+    np.sort(rng.choice(16 * n_per, size=rng.integers(4, 14), replace=False))
+    for _ in range(16)
+]
+pattern = CommPattern.from_block_partition(needs, offsets)
+
+print("strategy  | inter msgs | inter bytes | intra msgs | intra bytes")
+for strategy in ("standard", "partial", "full"):
+    plan = build_plan(pattern, topo, strategy)
+    t = plan.stats.totals()
+    print(f"{strategy:9s} | {t['inter_msgs']:10d} | {t['inter_bytes']:11d}"
+          f" | {t['intra_msgs']:10d} | {t['intra_bytes']:11d}")
+
+# persistent-collective API: init once (expensive), execute every iteration
+coll = NeighborAlltoallV.init(pattern, topo, strategy="auto")
+print(f"\nauto-selected: {coll.strategy} "
+      f"(modeled {coll.modeled_time() * 1e6:.1f} us/iter); "
+      f"init took {coll.init_seconds * 1e3:.1f} ms")
+
+vals = [rng.normal(size=(n_per,)) for _ in range(16)]
+ghosts = coll(vals)  # start + wait
+want = np.concatenate([
+    [vals[pattern.owner_proc[g]][pattern.owner_slot[g]] for g in needs[q]]
+    for q in range(16) if len(needs[q])
+])
+got = np.concatenate([g for g in ghosts if len(g)])
+assert np.array_equal(got, want)
+print("delivery verified: every process received exactly its needed values")

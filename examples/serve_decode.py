@@ -1,0 +1,25 @@
+"""Batched serving example: prefill a batch of prompts, stream greedy
+tokens with per-layer KV caches (rolling windows where the arch is
+sliding-window).  Uses the same serving path the decode_32k / long_500k
+dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "gemma3-1b"] + argv
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    sys.argv = [sys.argv[0]] + argv
+    from repro.launch.serve import main as serve_main
+    serve_main()
+
+
+if __name__ == "__main__":
+    main()

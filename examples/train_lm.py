@@ -1,0 +1,73 @@
+"""Train a language model end-to-end with the full substrate: synthetic
+data pipeline, AdamW + cosine schedule, remat, checkpointing, restart.
+
+Default is a ~10M-parameter qwen2-family model for a quick CPU run; pass
+--dmodel 512 --layers 12 --vocab 32000 for a ~100M configuration (same
+code path — only wall-clock changes).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import Model
+from repro.runtime import CheckpointManager
+from repro.train import (
+    AdamWConfig, DataConfig, TokenStream, TrainerConfig,
+    make_train_state, make_train_step,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dmodel", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = configs.get("qwen2-0.5b")
+    cfg = dataclasses.replace(
+        base, name="train-lm-example", n_layers=args.layers,
+        d_model=args.dmodel, n_heads=max(4, args.dmodel // 64),
+        n_kv_heads=max(2, args.dmodel // 128), d_ff=args.dmodel * 4,
+        vocab=args.vocab, dtype=jnp.float32,
+    )
+    model = Model(cfg)
+    print(f"[example] params: {cfg.param_count():,}")
+    tcfg = TrainerConfig(opt=AdamWConfig(
+        lr=1e-3, warmup_steps=max(10, args.steps // 20),
+        total_steps=args.steps))
+    data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    step = jax.jit(make_train_step(model, tcfg))
+    state = make_train_state(model, tcfg, seed=0)
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    start = 0
+    got = mgr.restore_latest(state)
+    if got:
+        start, state = got
+        state = jax.tree.map(jnp.asarray, state)
+        print(f"[example] resumed at step {start}")
+    for i in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, data.global_batch_at(i))
+        state, m = step(state, batch)
+        if (i + 1) % 20 == 0:
+            mgr.save(i + 1, state)
+            print(f"step {i + 1:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e}")
+    mgr.wait()
+    print("[example] done — loss should have dropped by >1 nat "
+          "(motif structure is learnable)")
+
+
+if __name__ == "__main__":
+    main()

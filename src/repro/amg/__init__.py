@@ -1,0 +1,9 @@
+from .stencil import diffusion_2d, paper_problem, rotated_anisotropic_stencil
+from .coarsen import direct_interpolation, pmis, strength_graph
+from .hierarchy import Hierarchy, Level, build_hierarchy, jacobi, solve, v_cycle
+
+__all__ = [
+    "diffusion_2d", "paper_problem", "rotated_anisotropic_stencil",
+    "direct_interpolation", "pmis", "strength_graph",
+    "Hierarchy", "Level", "build_hierarchy", "jacobi", "solve", "v_cycle",
+]

@@ -1,0 +1,139 @@
+"""Classical AMG setup: strength of connection, PMIS coarsening, direct
+interpolation.  Fully vectorized numpy (no scipy) so the paper-scale problem
+(524,288 rows) sets up in seconds on one core.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from ..sparse.csr import CSR
+
+
+def strength_graph(A: CSR, theta: float = 0.25) -> CSR:
+    """Classical strength: j strongly influences i if
+    -a_ij >= theta * max_k(-a_ik), k != i.  Returns boolean-pattern CSR
+    (data=1.0) without the diagonal."""
+    rows = A.row_indices()
+    offd = rows != A.indices
+    neg = np.where(offd, -A.data, 0.0)
+    # per-row max of neg via segment max
+    row_max = np.zeros(A.nrows)
+    np.maximum.at(row_max, rows, neg)
+    keep = offd & (neg >= theta * row_max[rows]) & (neg > 0)
+    return CSR.from_coo(
+        rows[keep],
+        A.indices[keep],
+        np.ones(int(keep.sum())),
+        A.shape,
+    )
+
+
+def pmis(S: CSR, seed: int = 0) -> np.ndarray:
+    """PMIS coarsening on the symmetrized strength graph.
+
+    Returns splitting: +1 C-point, 0 F-point.  Vectorized rounds: a point
+    becomes C if its weight beats every undecided strong neighbor; neighbors
+    of new C-points become F.
+    """
+    n = S.nrows
+    G = CSR.from_coo(  # symmetrize
+        np.concatenate([S.row_indices(), S.indices.astype(np.int64)]),
+        np.concatenate([S.indices.astype(np.int64), S.row_indices()]),
+        np.ones(2 * S.nnz),
+        S.shape,
+    )
+    rng = np.random.default_rng(seed)
+    deg = np.diff(G.indptr).astype(np.float64)
+    w = deg + rng.random(n)
+    UNDECIDED, CPT, FPT = 0, 1, 2
+    state = np.full(n, UNDECIDED, dtype=np.int8)
+    state[deg == 0] = FPT  # isolated points need no interpolation
+    g_rows = G.row_indices()
+    g_cols = G.indices.astype(np.int64)
+    while np.any(state == UNDECIDED):
+        active_w = np.where(state == UNDECIDED, w, -1.0)
+        nbr_max = np.zeros(n)
+        edge_active = (state[g_rows] == UNDECIDED)
+        np.maximum.at(nbr_max, g_rows[edge_active],
+                      active_w[g_cols[edge_active]])
+        new_c = (state == UNDECIDED) & (active_w > nbr_max)
+        if not np.any(new_c):  # ties (prob ~0): break deterministically
+            cand = np.flatnonzero(state == UNDECIDED)
+            new_c = np.zeros(n, dtype=bool)
+            new_c[cand[0]] = True
+        state[new_c] = CPT
+        # strong neighbors of new C-points become F
+        hit = new_c[g_cols] & (state[g_rows] == UNDECIDED)
+        state[g_rows[hit]] = FPT
+    return (state == CPT).astype(np.int8)
+
+
+def direct_interpolation(A: CSR, S: CSR, splitting: np.ndarray) -> CSR:
+    """Classical direct interpolation (negative couplings; M-matrix form).
+
+    F-point i interpolates from its strong C-neighbors C_i:
+        w_ij = -(sum_k a_ik^-) / (sum_{j in C_i} a_ij^-) * a_ij / a_ii
+    F-points with no strong C-neighbor are promoted to C (splitting is
+    updated in place).  C-point rows are identity.
+    """
+    n = A.nrows
+    # mark strong edges in A's pattern
+    srows, scols = S.row_indices(), S.indices.astype(np.int64)
+    strong = set_like = None
+    strong_lookup = CSR.from_coo(srows, scols, np.ones(len(srows)), A.shape)
+
+    arows = A.row_indices()
+    acols = A.indices.astype(np.int64)
+    avals = A.data
+
+    # edge is interpolatory: strong and endpoint is C
+    # membership test via merged pattern: build keys
+    def has_edge(pattern: CSR, r: np.ndarray, c: np.ndarray) -> np.ndarray:
+        key_p = pattern.row_indices() * n + pattern.indices.astype(np.int64)
+        key_q = r * n + c
+        key_p_sorted = np.sort(key_p)
+        pos = np.searchsorted(key_p_sorted, key_q)
+        pos = np.minimum(pos, len(key_p_sorted) - 1)
+        return (len(key_p_sorted) > 0) & (key_p_sorted[pos] == key_q)
+
+    is_strong_edge = has_edge(strong_lookup, arows, acols)
+
+    for _pass in range(30):  # promote until every F has a strong C neighbor
+        interp_edge = is_strong_edge & (splitting[acols] == 1)
+        has_c = np.zeros(n, dtype=bool)
+        has_c[arows[interp_edge]] = True
+        bad_f = (splitting == 0) & ~has_c
+        # isolated rows (no strong neighbors at all) stay F: they inject 0
+        deg_strong = np.zeros(n, dtype=np.int64)
+        np.add.at(deg_strong, srows, 1)
+        bad_f &= deg_strong > 0
+        if not np.any(bad_f):
+            break
+        splitting = splitting.copy()
+        splitting[bad_f] = 1
+
+    cpts = np.flatnonzero(splitting == 1)
+    cmap = -np.ones(n, dtype=np.int64)
+    cmap[cpts] = np.arange(len(cpts))
+
+    diag = A.diagonal()
+    offd = arows != acols
+    neg = np.where(offd & (avals < 0), avals, 0.0)
+    row_neg_sum = np.zeros(n)
+    np.add.at(row_neg_sum, arows, neg)
+    interp_edge = is_strong_edge & (splitting[acols] == 1) & (avals < 0)
+    row_cneg_sum = np.zeros(n)
+    np.add.at(row_cneg_sum, arows[interp_edge], avals[interp_edge])
+
+    fmask = interp_edge & (splitting[arows] == 0)
+    ri, ci, vi = arows[fmask], acols[fmask], avals[fmask]
+    alpha = np.where(row_cneg_sum[ri] != 0, row_neg_sum[ri] / row_cneg_sum[ri], 0.0)
+    w = -alpha * vi / diag[ri]
+
+    prow = np.concatenate([ri, cpts])
+    pcol = np.concatenate([cmap[ci], cmap[cpts]])
+    pval = np.concatenate([w, np.ones(len(cpts))])
+    P = CSR.from_coo(prow, pcol, pval, (n, len(cpts)))
+    return P, splitting

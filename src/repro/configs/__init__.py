@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned arch (+ paper workload).
+
+``get(name)`` -> full ArchConfig (the assignment's exact numbers);
+``reduced(name)`` -> same family, tiny dims (CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS = [
+    "nemotron-4-15b",
+    "gemma3-1b",
+    "qwen1.5-0.5b",
+    "qwen2-0.5b",
+    "mamba2-780m",
+    "qwen2-vl-2b",
+    "deepseek-v2-lite-16b",
+    "mixtral-8x7b",
+    "zamba2-7b",
+    "seamless-m4t-medium",
+]
+
+_MODULES = {
+    "nemotron-4-15b": "nemotron_4_15b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "mamba2-780m": "mamba2_780m",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "zamba2-7b": "zamba2_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return importlib.import_module(f".{_MODULES[name]}", __package__)
+
+
+def get(name: str):
+    return _mod(name).config()
+
+
+def reduced(name: str):
+    return _mod(name).reduced()
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)

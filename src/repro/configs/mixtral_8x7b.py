@@ -1,0 +1,39 @@
+"""mixtral-8x7b [moe]: 32L d4096 32H (GQA kv=8) expert ff=14336
+vocab=32000, 8 experts top-2, sliding-window attention
+(arXiv:2401.04088)."""
+from ..models.common import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=0,
+        d_ff_expert=14336,
+        vocab=32000,
+        n_experts=8,
+        top_k=2,
+        window=4096,
+        rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral-8x7b-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=0,
+        d_ff_expert=64,
+        vocab=512,
+        n_experts=4,
+        top_k=2,
+        window=16,
+    )

@@ -1,0 +1,39 @@
+"""seamless-m4t-medium [audio]: enc-dec, 12 encoder + 12 decoder layers,
+d1024 16H ff4096 vocab=256206; audio frontend = STUB (input_specs supply
+precomputed frame embeddings) (arXiv:2308.11596)."""
+from ..models.common import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=24,
+        n_enc_layers=12,
+        n_dec_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        # 256,206 padded to 256,256 (= 256*1001) for TP-friendly sharding
+        vocab=256256,
+        act="gelu",
+        frontend_stub=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-medium-smoke",
+        family="audio",
+        n_layers=4,
+        n_enc_layers=2,
+        n_dec_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=512,
+        act="gelu",
+        frontend_stub=True,
+    )

@@ -1,0 +1,51 @@
+"""Assigned input shapes x applicability rules (see DESIGN.md).
+
+Every arch is paired with four shapes; ``long_500k`` requires sub-quadratic
+attention and therefore runs only for SSM/hybrid/sliding-window archs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from ..models.common import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose every attention layer is full (quadratic) attention: skip 500k
+_FULL_ATTN_ONLY = {
+    "nemotron-4-15b", "qwen1.5-0.5b", "qwen2-0.5b", "qwen2-vl-2b",
+    "deepseek-v2-lite-16b", "seamless-m4t-medium",
+}
+
+
+def applicable(arch_name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch_name in _FULL_ATTN_ONLY:
+        return False
+    return True
+
+
+def skip_reason(arch_name: str, shape_name: str) -> Optional[str]:
+    if not applicable(arch_name, shape_name):
+        return ("long_500k requires sub-quadratic attention; "
+                f"{arch_name} is pure full-attention (see DESIGN.md)")
+    return None
+
+
+def all_cells() -> List:
+    from . import ARCHS
+    return [(a, s) for a in ARCHS for s in SHAPES]

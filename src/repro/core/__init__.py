@@ -1,0 +1,36 @@
+"""Core: locality-aware persistent neighborhood collectives (the paper's
+contribution), planned on host and executed as shard_map collective programs.
+"""
+from .plan import (
+    CommPattern,
+    CommPlan,
+    CommStep,
+    Message,
+    PlanStats,
+    StepStats,
+    Topology,
+    color_rounds,
+    padded_wire_volume,
+)
+from .locality import STRATEGIES, build_plan, plan_full, plan_partial, plan_standard
+from .costmodel import LASSEN, MACHINES, TPU_V5E, MachineParams, plan_time
+from .selection import SelectionReport, per_pattern_best, select_plan
+from .collectives import (
+    DevicePlan,
+    build_device_plan,
+    make_executor,
+    pack_local_values,
+    unpack_ghosts,
+)
+from .neighborhood import NeighborAlltoallV
+
+__all__ = [
+    "CommPattern", "CommPlan", "CommStep", "Message", "PlanStats", "StepStats",
+    "Topology", "color_rounds", "padded_wire_volume",
+    "STRATEGIES", "build_plan", "plan_full", "plan_partial", "plan_standard",
+    "LASSEN", "MACHINES", "TPU_V5E", "MachineParams", "plan_time",
+    "SelectionReport", "per_pattern_best", "select_plan",
+    "DevicePlan", "build_device_plan", "make_executor",
+    "pack_local_values", "unpack_ghosts",
+    "NeighborAlltoallV",
+]

@@ -1,0 +1,67 @@
+"""Persistent neighborhood collective facade (the MPI_Neighbor_alltoallv_init
+analogue).
+
+    coll = NeighborAlltoallV.init(pattern, topo, strategy="auto")
+    ghosts = coll(x)            # start+wait, host (numpy) path
+    exec_fn = coll.bind(mesh, axis_name="proc")
+    ghosts = jax.jit(exec_fn)(x_global)   # device path
+
+``init`` is the expensive once-per-pattern step (plan construction, load
+balancing, dedup); calls are the cheap per-iteration start/wait.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .collectives import DevicePlan, build_device_plan, make_executor
+from .costmodel import MachineParams, TPU_V5E, plan_time
+from .locality import build_plan
+from .plan import CommPattern, CommPlan, Topology
+from .selection import SelectionReport, select_plan
+
+
+@dataclass
+class NeighborAlltoallV:
+    plan: CommPlan
+    device_plan: DevicePlan
+    init_seconds: float
+    selection: Optional[SelectionReport] = None
+
+    @classmethod
+    def init(
+        cls,
+        pattern: CommPattern,
+        topo: Topology,
+        strategy: str = "auto",
+        value_bytes: int = 8,
+        params: MachineParams = TPU_V5E,
+    ) -> "NeighborAlltoallV":
+        t0 = time.perf_counter()
+        report = None
+        if strategy == "auto":
+            plan, report = select_plan(
+                pattern, topo, params=params, value_bytes=value_bytes
+            )
+        else:
+            plan = build_plan(pattern, topo, strategy, value_bytes=value_bytes)
+        dplan = build_device_plan(plan)
+        return cls(plan, dplan, time.perf_counter() - t0, report)
+
+    # host-side start/wait (oracle + small-scale use)
+    def __call__(self, local_vals: Sequence[np.ndarray]) -> List[np.ndarray]:
+        return self.plan.execute_numpy(local_vals)
+
+    # device-side start/wait
+    def bind(self, mesh, axis_name: str) -> Callable:
+        return make_executor(self.device_plan, mesh, axis_name)
+
+    def modeled_time(self, params: MachineParams = TPU_V5E) -> float:
+        return plan_time(self.plan, params)
+
+    @property
+    def strategy(self) -> str:
+        return self.plan.strategy

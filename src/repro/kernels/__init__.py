@@ -1,0 +1,48 @@
+"""Pallas TPU kernels for the compute hot spots + backend selection.
+
+Each kernel lives in ``kernels/<name>/`` with three files:
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec VMEM
+  tiling (TPU is the target; ``interpret=True`` validates on CPU),
+* ``ops.py``   — the jit'd public wrapper (padding, dtype plumbing, vmap),
+* ``ref.py``   — the pure-jnp oracle used by tests and by the CPU/dry-run
+  path (Pallas TPU kernels cannot lower on the CPU backend, so model code
+  calls ``ops.<fn>`` which dispatches on :func:`backend`).
+
+Backends: ``reference`` (default on CPU; also what the 512-device dry-run
+lowers, keeping HLO costs analyzable), ``pallas_interpret`` (kernel body
+executed in Python — correctness tests), ``pallas`` (real TPU).
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "reference")
+_VALID = ("reference", "pallas_interpret", "pallas")
+
+
+def backend() -> str:
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend {name!r} not in {_VALID}")
+    _BACKEND = name
+
+
+@contextmanager
+def use_backend(name: str):
+    global _BACKEND
+    old = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _BACKEND = old
+
+
+def interpret_mode() -> bool:
+    return _BACKEND == "pallas_interpret"

@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window).
+
+Two implementations:
+
+``attention_ref_naive`` — materializes the full [Tq, Tk] score matrix;
+ground truth for small-shape kernel tests.
+
+``attention_ref`` — CHUNKED online-softmax (lax.scan over KV chunks): the
+same dataflow as the Pallas kernel, O(Tq * chunk) transient memory.  This
+is what model code lowers on the reference backend, so the dry-run's
+memory analysis reflects flash-attention behavior rather than a naive
+O(T^2) blow-up.  (XLA cost analysis counts a scan body once; the dry-run
+adds the analytic attention-FLOP correction — see launch/roofline.py.)
+
+``window`` may be a traced scalar (0 = full attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+DEFAULT_REF_CHUNK = 512
+
+
+def _mask(q_pos, k_pos, causal, window, kv_len):
+    m = k_pos < kv_len
+    if causal:
+        m &= k_pos <= q_pos
+    win = jnp.asarray(window, jnp.int32)
+    m &= (k_pos > q_pos - win) | (win <= 0)
+    return m
+
+
+def attention_ref_naive(
+    q: jnp.ndarray,   # [B, Hq, Tq, d]
+    k: jnp.ndarray,   # [B, Hkv, Tk, d]
+    v: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    kv_len = Tk if kv_len is None else kv_len
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = _mask(q_pos, k_pos, causal, window, kv_len)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0, 1.0, l)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(jnp.float32),
+                     vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,   # [B, Hq, Tq, d]
+    k: jnp.ndarray,   # [B, Hkv, Tk, d]
+    v: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,
+    kv_len: int | None = None,
+    q_offset: int = 0,
+    chunk: int = DEFAULT_REF_CHUNK,
+) -> jnp.ndarray:
+    B, Hq, Tq, d = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    if Tk <= chunk:
+        return attention_ref_naive(
+            q, k, v, scale=scale, causal=causal, window=window,
+            kv_len=kv_len, q_offset=q_offset,
+        )
+    scale = (d ** -0.5) if scale is None else scale
+    kv_len = Tk if kv_len is None else kv_len
+    group = Hq // Hkv
+
+    pad = (-Tk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = k.shape[2] // chunk
+    kc = jnp.moveaxis(
+        k.reshape(B, Hkv, nc, chunk, d), 2, 0
+    )  # [nc, B, Hkv, chunk, d]
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nc, chunk, d), 2, 0)
+
+    qf = q.astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = inp
+        kb = jnp.repeat(kb, group, axis=1).astype(jnp.float32)
+        vb = jnp.repeat(vb, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = _mask(q_pos, k_pos, causal, window, kv_len)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hq, Tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Tq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Tq, d), jnp.float32)
+    # checkpoint the chunk body: backward recomputes the [Tq, chunk] scores
+    # per chunk instead of saving them all (flash-attention's bwd strategy);
+    # residuals shrink from O(Tq*Tk) to O(Tq*d) per chunk.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, jnp.arange(nc))
+    )
+    out = acc / jnp.where(l == 0, 1.0, l)
+    return out.astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for MoE pack/combine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return x[idx]
+
+
+def combine_rows_ref(buf: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray):
+    # out[t] = sum_k w[t,k] * buf[idx[t,k]]
+    gathered = buf[idx]                      # [T, K, D]
+    return jnp.einsum(
+        "tk,tkd->td", w.astype(jnp.float32), gathered.astype(jnp.float32)
+    ).astype(buf.dtype)

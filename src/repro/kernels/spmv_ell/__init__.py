@@ -1,0 +1,4 @@
+from .ops import csr_to_ell, spmv
+from .ref import spmv_ell_ref
+
+__all__ = ["csr_to_ell", "spmv", "spmv_ell_ref"]

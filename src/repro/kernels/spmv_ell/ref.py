@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for ELL SpMV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray):
+    """cols/vals: [R, K]; x: [N] -> y [R]."""
+    return jnp.sum(vals * x[cols], axis=1)

@@ -1,0 +1,85 @@
+"""Oracles for the SSD scan.
+
+``ssd_ref``          — literal per-timestep recurrence (lax.scan): the ground
+                       truth used by kernel tests.
+``ssd_chunked_ref``  — vectorized chunked form in pure jnp: mathematically
+                       identical, MXU-friendly; this is what model code runs
+                       on the ``reference`` backend so HLO FLOPs match the
+                       kernel's algorithm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: [H,T,P], dt: [H,T], A: [H], B,C: [H,T,N] -> y [H,T,P]."""
+    H, T, P = x.shape
+    N = B.shape[-1]
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct, At = inp  # [H,P],[H],[H,N],[H,N],[H]
+        a = jnp.exp(dtt * At)[:, None, None]          # [H,1,1]
+        S = a * S + (dtt[:, None] * Bt)[..., None] * xt[:, None, :]  # [H,N,P]
+        y = jnp.einsum("hn,hnp->hp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+        jnp.broadcast_to(A.astype(jnp.float32), (T,) + A.shape),
+    )
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [H,T,P]
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD identical to the kernel's algorithm, vectorized over
+    (head, chunk) with a scan across chunks for the state recurrence."""
+    H, T, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    L = chunk
+    xc = x.reshape(H, nc, L, P).astype(jnp.float32)
+    dtc = dt.reshape(H, nc, L).astype(jnp.float32)
+    Bc = B.reshape(H, nc, L, N).astype(jnp.float32)
+    Cc = C.reshape(H, nc, L, N).astype(jnp.float32)
+    log_a = dtc * A[:, None, None].astype(jnp.float32)  # [H,nc,L]
+    l_cum = jnp.cumsum(log_a, axis=-1)
+    l_tot = l_cum[..., -1]                               # [H,nc]
+
+    # intra-chunk
+    cb = jnp.einsum("hctn,hcsn->hcts", Cc, Bc)
+    t_idx = jnp.arange(L)[:, None]
+    s_idx = jnp.arange(L)[None, :]
+    causal = (s_idx <= t_idx).astype(jnp.float32)
+    decay = jnp.exp(l_cum[..., :, None] - l_cum[..., None, :]) * causal
+    M = cb * decay * dtc[..., None, :]
+    y_intra = jnp.einsum("hcts,hcsp->hctp", M, xc)
+
+    # per-chunk state contribution
+    w = jnp.exp(l_tot[..., None] - l_cum) * dtc          # [H,nc,L]
+    S_chunk = jnp.einsum("hcln,hclp->hcnp", Bc * w[..., None], xc)
+
+    # scan across chunks: S_out[c] = state *entering* chunk c
+    def step(S, inp):
+        S_c, g = inp  # [H,N,P], [H]
+        S_next = jnp.exp(g)[:, None, None] * S + S_c
+        return S_next, S
+
+    S0 = jnp.zeros((H, N, P), jnp.float32)
+    _, S_in = jax.lax.scan(
+        step, S0,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(l_tot, 1, 0)),
+    )
+    S_in = jnp.moveaxis(S_in, 0, 1)                      # [H,nc,N,P]
+    y_inter = jnp.exp(l_cum)[..., None] * jnp.einsum(
+        "hcln,hcnp->hclp", Cc, S_in
+    )
+    y = (y_intra + y_inter).reshape(H, T, P)
+    return y.astype(x.dtype)

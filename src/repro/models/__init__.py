@@ -1,0 +1,5 @@
+from .common import ArchConfig, Initializer
+from .lm import Model
+from . import serving
+
+__all__ = ["ArchConfig", "Initializer", "Model", "serving"]

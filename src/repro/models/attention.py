@@ -1,0 +1,238 @@
+"""Attention variants: GQA (w/ bias, qk-norm, sliding window, M-RoPE) and
+DeepSeek-style MLA (compressed KV cache with decoupled RoPE).
+
+All variants share the cache contract:
+  prefill: cache is None -> returns full-length K/V (or compressed) tensors
+  decode : cache given    -> new token written at position ``kv_len``; the
+           flash kernel masks entries >= kv_len+T.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import attention as flash
+from .common import ArchConfig, Initializer, apply_mrope, apply_rope, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# standard GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(init: Initializer, cfg: ArchConfig, L: int, d_in: int = 0) -> Dict:
+    d = d_in or cfg.d_model
+    dh = cfg.head_dim
+    p = {
+        "wq": init.tensor((L, d, cfg.n_heads * dh), fan_in=d),
+        "wk": init.tensor((L, d, cfg.n_kv_heads * dh), fan_in=d),
+        "wv": init.tensor((L, d, cfg.n_kv_heads * dh), fan_in=d),
+        "wo": init.tensor((L, cfg.n_heads * dh, cfg.d_model),
+                          fan_in=cfg.n_heads * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = init.tensor((L, cfg.n_heads * dh), zero=True)
+        p["bk"] = init.tensor((L, cfg.n_kv_heads * dh), zero=True)
+        p["bv"] = init.tensor((L, cfg.n_kv_heads * dh), zero=True)
+    if cfg.qk_norm:
+        p["q_norm"] = init.tensor((L, dh), zero=True)
+        p["k_norm"] = init.tensor((L, dh), zero=True)
+    return p
+
+
+def gqa_project_qkv(
+    p: Dict,
+    x: jnp.ndarray,               # [B, T, d]
+    positions: jnp.ndarray,       # [B, T] (or [B, 3, T] when mrope)
+    cfg: ArchConfig,
+    rope: bool = True,
+    kv_x: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project + (m)rope q/k/v -> [B, H(q|kv), T, dh]."""
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    src = x if kv_x is None else kv_x
+    Ts = src.shape[1]
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, Ts, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Ts, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
+    return q, k, v
+
+
+def gqa_project_out(p: Dict, o: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """o: [B, Hq, T, dh] -> [B, T, d]."""
+    B, H, T, dh = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(B, T, H * dh) @ p["wo"]
+
+
+def gqa_attention(
+    p: Dict,                      # single-layer slice of init_gqa params
+    x: jnp.ndarray,               # [B, T, d]
+    positions: jnp.ndarray,       # [B, T] (or [B, 3, T] when mrope)
+    cfg: ArchConfig,
+    window: int = 0,
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (k,v) [B,Hkv,S,dh]
+    kv_len: Optional[jnp.ndarray | int] = None,               # filled entries
+    kv_x: Optional[jnp.ndarray] = None,                       # cross-attn memory
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    causal = kv_x is None
+    q, k, v = gqa_project_qkv(p, x, positions, cfg, rope=causal, kv_x=kv_x)
+    Ts = k.shape[2]
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache  # [B, Hkv, S, dh]
+        start = kv_len if kv_len is not None else 0
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, start, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+        total = (kv_len + T) if kv_len is not None else T
+        out = flash(q, k, v, causal=causal, window=window,
+                    kv_len=total, q_offset=kv_len if kv_len is not None else 0)
+    else:
+        out = flash(q, k, v, causal=causal, window=window,
+                    kv_len=Ts if kv_x is not None else T, q_offset=0)
+    return gqa_project_out(p, out, cfg), new_cache
+
+
+def gqa_cross_from_cache(
+    p: Dict,
+    x: jnp.ndarray,               # [B, T, d] decoder states
+    cache: Tuple[jnp.ndarray, jnp.ndarray],  # projected enc K/V [B,Hkv,S,dh]
+    cfg: ArchConfig,
+    enc_len: Optional[int] = None,
+) -> jnp.ndarray:
+    """Cross-attention against a *static* projected encoder cache (decode
+    path: K/V are projected once at prefill, never recomputed)."""
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, T, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    k, v = cache
+    out = flash(q, k, v, causal=False, kv_len=enc_len or k.shape[2])
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * dh)
+    return out @ p["wo"]
+
+
+def project_cross_kv(
+    p: Dict, memory: jnp.ndarray, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, _ = memory.shape
+    dh = cfg.head_dim
+    k = memory @ p["wk"]
+    v = memory @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+def init_mla(init: Initializer, cfg: ArchConfig, L: int) -> Dict:
+    d = cfg.d_model
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": init.tensor((L, d, cfg.n_heads * qk), fan_in=d),
+        "w_dkv": init.tensor((L, d, cfg.kv_lora + cfg.qk_rope_dim), fan_in=d),
+        "kv_norm": init.tensor((L, cfg.kv_lora), zero=True),
+        "w_uk": init.tensor((L, cfg.kv_lora, cfg.n_heads * cfg.qk_nope_dim),
+                            fan_in=cfg.kv_lora),
+        "w_uv": init.tensor((L, cfg.kv_lora, cfg.n_heads * cfg.v_head_dim),
+                            fan_in=cfg.kv_lora),
+        "wo": init.tensor((L, cfg.n_heads * cfg.v_head_dim, d),
+                          fan_in=cfg.n_heads * cfg.v_head_dim),
+    }
+
+
+def mla_attention(
+    p: Dict,
+    x: jnp.ndarray,               # [B, T, d]
+    positions: jnp.ndarray,       # [B, T]
+    cfg: ArchConfig,
+    cache: Optional[jnp.ndarray] = None,   # compressed: [B, S, kv_lora+rope]
+    kv_len: Optional[jnp.ndarray | int] = None,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    q = (x @ p["wq"]).reshape(B, T, H, qk).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_new = x @ p["w_dkv"]                       # [B, T, lora+rope]
+    # rope part of k is shared across heads, rotated at *its own* position
+    k_rope_new = apply_rope(
+        ckv_new[:, None, :, cfg.kv_lora:], positions, cfg.rope_theta
+    )[:, 0]
+    ckv_new = jnp.concatenate(
+        [ckv_new[..., : cfg.kv_lora], k_rope_new], axis=-1
+    )
+
+    new_cache = None
+    if cache is not None:
+        start = kv_len if kv_len is not None else 0
+        cache = jax.lax.dynamic_update_slice(
+            cache, ckv_new.astype(cache.dtype), (0, start, 0)
+        )
+        new_cache = cache
+        ckv = cache
+        total = (kv_len + T) if kv_len is not None else T
+        q_offset = kv_len if kv_len is not None else 0
+    else:
+        ckv = ckv_new
+        total = T
+        q_offset = 0
+
+    S = ckv.shape[1]
+    c = rms_norm(ckv[..., : cfg.kv_lora], p["kv_norm"])
+    k_nope = (c @ p["w_uk"]).reshape(B, S, H, cfg.qk_nope_dim
+                                     ).transpose(0, 2, 1, 3)
+    v = (c @ p["w_uv"]).reshape(B, S, H, cfg.v_head_dim).transpose(0, 2, 1, 3)
+    k_rope = jnp.broadcast_to(
+        ckv[:, None, :, cfg.kv_lora:], (B, H, S, cfg.qk_rope_dim)
+    )
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    # pad v head dim up to qk dim for the shared kernel, slice after
+    if cfg.v_head_dim < qk:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - cfg.v_head_dim)))
+    out = flash(qfull, k, v, causal=True, kv_len=total, q_offset=q_offset,
+                scale=qk ** -0.5)
+    out = out[..., : cfg.v_head_dim]
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * cfg.v_head_dim)
+    return out @ p["wo"], new_cache

@@ -1,0 +1,95 @@
+"""Transformer blocks shared across the dense/moe/vlm/audio families."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    gqa_attention,
+    gqa_cross_from_cache,
+    init_gqa,
+    init_mla,
+    mla_attention,
+    project_cross_kv,
+)
+from .common import ArchConfig, Initializer, activation, rms_norm
+
+
+def init_mlp(init: Initializer, d: int, f: int, L: int,
+             gated: bool = True) -> Dict:
+    p = {
+        "w_up": init.tensor((L, d, f), fan_in=d),
+        "w_down": init.tensor((L, f, d), fan_in=f),
+    }
+    if gated:
+        p["w_gate"] = init.tensor((L, d, f), fan_in=d)
+    return p
+
+
+def mlp(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    fn = activation(act)
+    if "w_gate" in p:
+        return (fn(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return fn(x @ p["w_up"]) @ p["w_down"]
+
+
+def init_dense_block(init: Initializer, cfg: ArchConfig, L: int,
+                     cross: bool = False, causal_family: bool = True) -> Dict:
+    p = {
+        "ln1": init.tensor((L, cfg.d_model), zero=True),
+        "ln2": init.tensor((L, cfg.d_model), zero=True),
+        "attn": (init_mla(init, cfg, L) if cfg.mla
+                 else init_gqa(init, cfg, L)),
+        "mlp": init_mlp(init, cfg.d_model, cfg.d_ff, L,
+                        gated=cfg.gated_mlp),
+    }
+    if cfg.sandwich_norm:
+        p["ln1_post"] = init.tensor((L, cfg.d_model), zero=True)
+        p["ln2_post"] = init.tensor((L, cfg.d_model), zero=True)
+    if cross:
+        p["ln_x"] = init.tensor((L, cfg.d_model), zero=True)
+        p["cross"] = init_gqa(init, cfg, L)
+    return p
+
+
+def dense_block(
+    p: Dict,                       # single-layer slice
+    x: jnp.ndarray,                # [B, T, d]
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+    window: jnp.ndarray | int = 0,
+    cache=None,
+    kv_len=None,
+    memory: Optional[jnp.ndarray] = None,          # enc-dec cross input
+    cross_cache: Optional[Tuple] = None,           # projected enc K/V
+    enc_len: Optional[int] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    h = rms_norm(x, p["ln1"])
+    if cfg.mla:
+        a, new_cache = mla_attention(p["attn"], h, positions, cfg,
+                                     cache=cache, kv_len=kv_len)
+    else:
+        a, new_cache = gqa_attention(
+            p["attn"], h, positions, cfg, window=window, cache=cache,
+            kv_len=kv_len, kv_x=None if causal else h,
+        )
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["ln1_post"])
+    x = x + a
+    if "cross" in p and (memory is not None or cross_cache is not None):
+        hx = rms_norm(x, p["ln_x"])
+        if cross_cache is not None:
+            cx = gqa_cross_from_cache(p["cross"], hx, cross_cache, cfg,
+                                      enc_len=enc_len)
+        else:
+            cx, _ = gqa_attention(p["cross"], hx, positions, cfg,
+                                  kv_x=memory)
+        x = x + cx
+    h = rms_norm(x, p["ln2"])
+    m = mlp(p["mlp"], h, cfg.act)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, p["ln2_post"])
+    return x + m, new_cache

@@ -1,0 +1,289 @@
+"""Shared model substrate: configs, norms, rotary embeddings, init, sharding.
+
+One ArchConfig dataclass covers all ten assigned families; family-specific
+fields are ignored where inapplicable.  Parameters are plain dict pytrees;
+per-layer parameters are stacked on a leading layer axis so the forward pass
+scans over layers (keeps the 512-device dry-run HLO small and compile times
+sane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | ssm | moe | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False
+    act: str = "silu"                     # silu | gelu | relu2
+    gated_mlp: bool = True                # False: plain act(xW_up)W_down
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0
+    qk_norm: bool = False
+    sandwich_norm: bool = False           # gemma3 pre+post block norms
+    tie_embeddings: bool = False
+    # local/global attention (gemma3, mixtral SWA)
+    window: int = 0                       # sliding window; 0 = full
+    local_global_period: int = 0          # every k-th layer is global (gemma3: 6)
+    # multimodal rope (qwen2-vl)
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    first_dense_layers: int = 0           # deepseek: first k layers dense
+    router_aux_coef: float = 0.001
+    # MLA (deepseek)
+    mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    d_conv: int = 4
+    # hybrid (zamba2): shared attention block every k SSM blocks
+    shared_attn_period: int = 0
+    n_shared_attn_blocks: int = 0
+    # encoder-decoder (seamless)
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # modality frontend stub (vlm/audio): inputs arrive as embeddings
+    frontend_stub: bool = False
+    max_seq: int = 131072
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def layer_is_global(self, i: int) -> bool:
+        """gemma3-style 5 local : 1 global pattern."""
+        if self.local_global_period <= 0:
+            return True
+        return (i + 1) % self.local_global_period == 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        return count_params_analytic(self)
+
+
+def count_params_analytic(c: ArchConfig) -> int:
+    dh = c.head_dim
+    n = 0
+    n += c.vocab * c.d_model                      # embed
+    if not c.tie_embeddings:
+        n += c.vocab * c.d_model                  # lm head
+    mlp_mats = 3 if c.gated_mlp else 2
+    if c.family in ("dense", "vlm"):
+        per = (
+            c.d_model * (c.n_heads * dh)          # q
+            + 2 * c.d_model * (c.n_kv_heads * dh) # k, v
+            + (c.n_heads * dh) * c.d_model        # o
+            + mlp_mats * c.d_model * c.d_ff       # (gate/)up/down
+            + 2 * c.d_model                       # norms
+        )
+        n += c.n_layers * per
+    elif c.family == "moe":
+        att = (
+            c.d_model * (c.n_heads * dh)
+            + 2 * c.d_model * (c.n_kv_heads * dh)
+            + (c.n_heads * dh) * c.d_model
+        ) if not c.mla else (
+            c.d_model * (c.n_heads * (c.qk_nope_dim + c.qk_rope_dim))
+            + c.d_model * (c.kv_lora + c.qk_rope_dim)
+            + c.kv_lora * (c.n_heads * (c.qk_nope_dim + c.v_head_dim))
+            + (c.n_heads * c.v_head_dim) * c.d_model
+        )
+        ffe = 3 * c.d_model * c.d_ff_expert
+        dense_ff = 3 * c.d_model * c.d_ff if c.d_ff else 0
+        moe_layers = c.n_layers - c.first_dense_layers
+        n += c.n_layers * (att + 2 * c.d_model)
+        n += c.first_dense_layers * dense_ff
+        n += moe_layers * (
+            c.n_experts * ffe
+            + c.n_shared_experts * ffe
+            + c.d_model * c.n_experts
+        )
+    elif c.family == "ssm":
+        di = c.d_inner
+        H = c.n_ssm_heads
+        per = (
+            c.d_model * (2 * di + 2 * c.ssm_groups * c.ssm_state + H)  # in_proj
+            + c.d_conv * (di + 2 * c.ssm_groups * c.ssm_state)         # conv
+            + 3 * H                                                     # A, D, dt_bias
+            + di * c.d_model                                            # out
+            + 2 * c.d_model
+        )
+        n += c.n_layers * per
+    elif c.family == "hybrid":
+        di = c.d_inner
+        H = c.n_ssm_heads
+        per = (
+            c.d_model * (2 * di + 2 * c.ssm_groups * c.ssm_state + H)
+            + c.d_conv * (di + 2 * c.ssm_groups * c.ssm_state)
+            + 3 * H + di * c.d_model + 2 * c.d_model
+        )
+        n += c.n_layers * per
+        attn = (
+            (2 * c.d_model) * (c.n_heads * dh)    # q from concat(2d)
+            + 2 * (2 * c.d_model) * (c.n_kv_heads * dh)
+            + (c.n_heads * dh) * c.d_model
+            + 3 * c.d_model * c.d_ff
+            + 2 * c.d_model
+        )
+        n += c.n_shared_attn_blocks * attn
+    elif c.family == "audio":
+        per = (
+            c.d_model * (c.n_heads * dh)
+            + 2 * c.d_model * (c.n_kv_heads * dh)
+            + (c.n_heads * dh) * c.d_model
+            + 3 * c.d_model * c.d_ff
+            + 2 * c.d_model
+        )
+        cross = (
+            c.d_model * (c.n_heads * dh)
+            + 2 * c.d_model * (c.n_kv_heads * dh)
+            + (c.n_heads * dh) * c.d_model
+            + c.d_model
+        )
+        n += c.n_enc_layers * per + c.n_dec_layers * (per + cross)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def activation(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # nemotron squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def rope_freqs(dh_rot: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh_rot, 2, dtype=jnp.float32) / dh_rot))
+
+
+def apply_rope(
+    x: jnp.ndarray,            # [B, H, T, dh]
+    positions: jnp.ndarray,    # [B, T] int32
+    theta: float,
+    partial: float = 1.0,
+) -> jnp.ndarray:
+    dh = x.shape[-1]
+    dh_rot = int(dh * partial)
+    dh_rot -= dh_rot % 2
+    freqs = rope_freqs(dh_rot, theta)                       # [dh_rot/2]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,dr/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :dh_rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    rot = rot.reshape(xr.shape)
+    return jnp.concatenate(
+        [rot.astype(x.dtype), x[..., dh_rot:]], axis=-1
+    ) if dh_rot < dh else rot.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,            # [B, H, T, dh]
+    positions3: jnp.ndarray,   # [B, 3, T] (t, h, w) position ids
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: frequency pairs split into (t,h,w) sections."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                           # [dh/2]
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                                      # [dh/2]
+    pos = jnp.take(positions3.astype(jnp.float32), sec, axis=1)  # [B, dh/2, T]
+    ang = pos.transpose(0, 2, 1)[:, None] * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)                   # [B,1,T,dh/2]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _trunc_normal(key, shape, scale, dtype):
+    std = scale
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            ).astype(dtype)
+
+
+class Initializer:
+    """Deterministic keyed initializer; abstract=True yields ShapeDtypeStructs
+    (the dry-run path: no host allocation of 15B-parameter models)."""
+
+    def __init__(self, seed: int, dtype, abstract: bool = False):
+        self.key = jax.random.PRNGKey(seed)
+        self.dtype = dtype
+        self.abstract = abstract
+        self._n = 0
+
+    def tensor(self, shape, fan_in: Optional[int] = None, zero: bool = False,
+               dtype=None):
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        self._n += 1
+        k = jax.random.fold_in(self.key, self._n)
+        if zero:
+            return jnp.zeros(shape, dtype)
+        fan = fan_in if fan_in else (shape[-2] if len(shape) >= 2 else shape[-1])
+        return _trunc_normal(k, shape, 1.0 / math.sqrt(max(fan, 1)), dtype)

@@ -1,0 +1,354 @@
+"""Serving: prefill + single-token decode for every family.
+
+The serving forward uses a python loop over layers (not scan) so per-layer
+cache shapes may differ: sliding-window layers allocate exactly ``window``
+KV slots (rolling cache, left-aligned, roll-when-full) while global layers
+allocate ``max_len``.  That asymmetry is what makes gemma3 / mixtral
+long_500k decodable: only the global/full layers pay O(max_len) memory.
+
+Cache invariants (attention layers):
+  * slots [0, filled) hold the most recent ``filled`` tokens in order;
+  * filled = min(cur_len, Lc); K entries are stored *post-RoPE* at their
+    true positions, so relative attention survives eviction;
+  * the flash kernel masks with kv_len=filled, q_offset=filled-1+T_new.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.flash_attention import attention as flash
+from .attention import (
+    gqa_project_out,
+    gqa_project_qkv,
+    mla_attention,
+    project_cross_kv,
+    gqa_cross_from_cache,
+)
+from .blocks import mlp
+from .common import rms_norm
+from .lm import Model, _stack_slice
+from .moe import make_moe_plan, moe_layer
+from .ssm import init_mamba_state, mamba_block
+
+
+# ---------------------------------------------------------------------------
+# attention-layer cache ops
+# ---------------------------------------------------------------------------
+
+
+def _prefill_attn(p_l, x, pos, cfg, window, max_len):
+    """Full-sequence attention; returns (out, (ck, cv, filled))."""
+    B, T, _ = x.shape
+    q, k, v = gqa_project_qkv(p_l, x, pos, cfg)
+    o = flash(q, k, v, causal=True, window=window)
+    out = gqa_project_out(p_l, o, cfg)
+    Lc = window if window > 0 else max_len
+    Hkv, dh = k.shape[1], k.shape[3]
+    if T >= Lc:
+        ck, cv = k[:, :, T - Lc:], v[:, :, T - Lc:]
+        filled = Lc
+    else:
+        ck = jnp.zeros((B, Hkv, Lc, dh), k.dtype).at[:, :, :T].set(k)
+        cv = jnp.zeros((B, Hkv, Lc, dh), v.dtype).at[:, :, :T].set(v)
+        filled = T
+    return out, {"k": ck, "v": cv}
+
+
+def _decode_attn(p_l, x, cur, cfg, window, cache):
+    """One-token attention against a rolling cache."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(cur[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[:, None, :], (B, 3, 1))
+    q, k, v = gqa_project_qkv(p_l, x, pos, cfg)   # k roped at true pos
+    ck, cv = cache["k"], cache["v"]
+    Lc = ck.shape[2]
+
+    def append(args):
+        ck, cv = args
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cur, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cur, 0))
+        return ck, cv
+
+    def roll(args):
+        ck, cv = args
+        ck = jnp.concatenate([ck[:, :, 1:], k.astype(ck.dtype)], axis=2)
+        cv = jnp.concatenate([cv[:, :, 1:], v.astype(cv.dtype)], axis=2)
+        return ck, cv
+
+    ck, cv = jax.lax.cond(cur >= Lc, roll, append, (ck, cv))
+    filled = jnp.minimum(cur + 1, Lc)
+    o = flash(q, ck, cv, causal=True, kv_len=filled, q_offset=filled - 1)
+    return gqa_project_out(p_l, o, cfg), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# family dispatch: one layer (prefill or decode)
+# ---------------------------------------------------------------------------
+
+
+def _moe_ffn(model: Model, p_l, h, n_tokens):
+    cfg = model.cfg
+    axes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    lanes = axes["model"]
+    n_dev = max(1, int(np.prod([axes[a] for a in model.batch_axes])))
+    plan = make_moe_plan(
+        cfg, model.mesh, max(1, n_tokens // n_dev // lanes),
+        mode=model.moe_mode, ep_over_pods=model.ep_over_pods,
+        cap_factor=model.moe_cap_factor,
+    )
+    y, _ = moe_layer(h, p_l["moe"], plan, cfg, model.mesh, model.batch_axes)
+    if cfg.n_shared_experts:
+        y = y + mlp({"w_" + k[3:]: v for k, v in p_l["moe"].items()
+                     if k.startswith("ws_")}, h, cfg.act)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(model: Model, params: Dict, inputs: Dict, max_len: int):
+    """Fill caches from a prompt. Returns (last_logits [B,V], cache)."""
+    cfg = model.cfg
+    if cfg.family == "audio":
+        return _prefill_encdec(model, params, inputs, max_len)
+    x = model._embed_in(params, inputs)
+    B, T = x.shape[:2]
+    pos = model._positions(inputs, T, B)
+    caches = []
+
+    if cfg.family in ("dense", "vlm"):
+        for i in range(cfg.n_layers):
+            p_l = _stack_slice(params["blocks"], i)
+            w = int(model.windows[i])
+            h = rms_norm(x, p_l["ln1"])
+            a, c = _prefill_attn(p_l["attn"], h, pos, cfg, w, max_len)
+            if cfg.sandwich_norm:
+                a = rms_norm(a, p_l["ln1_post"])
+            x = x + a
+            h = rms_norm(x, p_l["ln2"])
+            m = mlp(p_l["mlp"], h, cfg.act)
+            if cfg.sandwich_norm:
+                m = rms_norm(m, p_l["ln2_post"])
+            x = x + m
+            caches.append(c)
+    elif cfg.family == "moe":
+        for i in range(cfg.first_dense_layers):
+            p_l = _stack_slice(params["dense0"], i)
+            h = rms_norm(x, p_l["ln1"])
+            if cfg.mla:
+                ckv0 = jnp.zeros(
+                    (B, max_len, cfg.kv_lora + cfg.qk_rope_dim), cfg.dtype
+                )
+                a, ckv = mla_attention(p_l["attn"], h, pos, cfg,
+                                       cache=ckv0, kv_len=0)
+                c = {"ckv": ckv}
+            else:
+                a, c = _prefill_attn(p_l["attn"], h, pos, cfg, 0, max_len)
+            x = x + a
+            x = x + mlp(p_l["mlp"], rms_norm(x, p_l["ln2"]), cfg.act)
+            caches.append(c)
+        L = cfg.n_layers - cfg.first_dense_layers
+        for i in range(L):
+            p_l = _stack_slice(params["blocks"], i)
+            h = rms_norm(x, p_l["ln1"])
+            if cfg.mla:
+                ckv0 = jnp.zeros(
+                    (B, max_len, cfg.kv_lora + cfg.qk_rope_dim), cfg.dtype
+                )
+                a, ckv = mla_attention(p_l["attn"], h, pos, cfg,
+                                       cache=ckv0, kv_len=0)
+                c = {"ckv": ckv}
+            else:
+                a, c = _prefill_attn(p_l["attn"], h, pos, cfg, cfg.window,
+                                     max_len)
+            x = x + a
+            h = rms_norm(x, p_l["ln2"])
+            x = x + _moe_ffn(model, p_l, h, B * T)
+            caches.append(c)
+    elif cfg.family == "ssm":
+        for i in range(cfg.n_layers):
+            p_l = _stack_slice(params["blocks"], i)
+            x, st = mamba_block(p_l, x, cfg, state=None,
+                                return_state=True)
+            caches.append(st)
+    elif cfg.family == "hybrid":
+        x0 = x
+        per = cfg.shared_attn_period
+        n_seg = cfg.n_layers // per
+        li = 0
+        for seg in range(n_seg):
+            for j in range(per):
+                p_l = _stack_slice(params["mamba_main"], li)
+                x, st = mamba_block(p_l, x, cfg, return_state=True)
+                caches.append(st)
+                li += 1
+            sb = _stack_slice(params["shared"],
+                              seg % cfg.n_shared_attn_blocks)
+            cat = jnp.concatenate([x, x0], axis=-1)
+            h = rms_norm(cat, sb["ln1"])
+            a, c = _prefill_attn(sb["attn"], h, pos, cfg, 0, max_len)
+            x = x + a
+            x = x + mlp(sb["mlp"], rms_norm(x, sb["ln2"]), cfg.act)
+            caches.append(c)
+        tail = cfg.n_layers - n_seg * per
+        for j in range(tail):
+            p_l = _stack_slice(params["mamba_tail"], j)
+            x, st = mamba_block(p_l, x, cfg, return_state=True)
+            caches.append(st)
+    logits = model._logits(params, rms_norm(x[:, -1:], params["final_norm"]))
+    return logits[:, 0], tuple(caches)
+
+
+def _prefill_encdec(model: Model, params, inputs, max_len):
+    cfg = model.cfg
+    enc = inputs["enc_embeds"].astype(cfg.dtype)
+    B, Se = enc.shape[:2]
+    pos_e = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    from .blocks import dense_block
+    for i in range(cfg.n_enc_layers):
+        p_l = _stack_slice(params["enc_blocks"], i)
+        enc, _ = dense_block(p_l, enc, pos_e, cfg, causal=False)
+    memory = rms_norm(enc, params["enc_norm"])
+
+    tokens = inputs["tokens"]             # decoder prompt (BOS etc.)
+    B, T = tokens.shape
+    x = model._embed_in(params, {"tokens": tokens})
+    pos = model._positions({}, T, B)
+    caches = []
+    for i in range(cfg.n_dec_layers):
+        p_l = _stack_slice(params["dec_blocks"], i)
+        h = rms_norm(x, p_l["ln1"])
+        a, c = _prefill_attn(p_l["attn"], h, pos, cfg, 0, max_len)
+        x = x + a
+        hx = rms_norm(x, p_l["ln_x"])
+        ckv = project_cross_kv(p_l["cross"], memory, cfg)
+        x = x + gqa_cross_from_cache(p_l["cross"], hx, ckv, cfg)
+        x = x + mlp(p_l["mlp"], rms_norm(x, p_l["ln2"]), cfg.act)
+        caches.append({**c, "cross_k": ckv[0], "cross_v": ckv[1]})
+    logits = model._logits(params, rms_norm(x[:, -1:], params["final_norm"]))
+    return logits[:, 0], tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(model: Model, params: Dict, inputs: Dict,
+                caches: Tuple, cur_len) -> Tuple[jnp.ndarray, Tuple]:
+    """One-token step. ``inputs``: {"tokens": [B,1]} or {"embeds": [B,1,d]}.
+    ``cur_len``: number of tokens already in the caches (traced scalar ok).
+    Returns (logits [B, V], new caches)."""
+    cfg = model.cfg
+    cur = jnp.asarray(cur_len, jnp.int32)
+    x = model._embed_in(params, inputs)
+    B = x.shape[0]
+    new_caches = []
+    ci = 0
+
+    def nxt():
+        nonlocal ci
+        c = caches[ci]
+        ci += 1
+        return c
+
+    if cfg.family in ("dense", "vlm"):
+        for i in range(cfg.n_layers):
+            p_l = _stack_slice(params["blocks"], i)
+            w = int(model.windows[i])
+            h = rms_norm(x, p_l["ln1"])
+            a, c = _decode_attn(p_l["attn"], h, cur, cfg, w, nxt())
+            if cfg.sandwich_norm:
+                a = rms_norm(a, p_l["ln1_post"])
+            x = x + a
+            h = rms_norm(x, p_l["ln2"])
+            m = mlp(p_l["mlp"], h, cfg.act)
+            if cfg.sandwich_norm:
+                m = rms_norm(m, p_l["ln2_post"])
+            x = x + m
+            new_caches.append(c)
+    elif cfg.family == "moe":
+        pos = jnp.broadcast_to(cur[None, None], (B, 1)).astype(jnp.int32)
+        for i in range(cfg.first_dense_layers):
+            p_l = _stack_slice(params["dense0"], i)
+            h = rms_norm(x, p_l["ln1"])
+            if cfg.mla:
+                c = nxt()
+                a, ckv = mla_attention(p_l["attn"], h, pos, cfg,
+                                       cache=c["ckv"], kv_len=cur)
+                c = {"ckv": ckv}
+            else:
+                a, c = _decode_attn(p_l["attn"], h, cur, cfg, 0, nxt())
+            x = x + a
+            x = x + mlp(p_l["mlp"], rms_norm(x, p_l["ln2"]), cfg.act)
+            new_caches.append(c)
+        L = cfg.n_layers - cfg.first_dense_layers
+        for i in range(L):
+            p_l = _stack_slice(params["blocks"], i)
+            h = rms_norm(x, p_l["ln1"])
+            if cfg.mla:
+                c = nxt()
+                a, ckv = mla_attention(p_l["attn"], h, pos, cfg,
+                                       cache=c["ckv"], kv_len=cur)
+                c = {"ckv": ckv}
+            else:
+                a, c = _decode_attn(p_l["attn"], h, cur, cfg, cfg.window,
+                                    nxt())
+            x = x + a
+            h = rms_norm(x, p_l["ln2"])
+            x = x + _moe_ffn(model, p_l, h, B)
+            new_caches.append(c)
+    elif cfg.family == "ssm":
+        for i in range(cfg.n_layers):
+            p_l = _stack_slice(params["blocks"], i)
+            x, st = mamba_block(p_l, x, cfg, state=nxt())
+            new_caches.append(st)
+    elif cfg.family == "hybrid":
+        x0 = x
+        per = cfg.shared_attn_period
+        n_seg = cfg.n_layers // per
+        li = 0
+        for seg in range(n_seg):
+            for j in range(per):
+                p_l = _stack_slice(params["mamba_main"], li)
+                x, st = mamba_block(p_l, x, cfg, state=nxt())
+                new_caches.append(st)
+                li += 1
+            sb = _stack_slice(params["shared"],
+                              seg % cfg.n_shared_attn_blocks)
+            cat = jnp.concatenate([x, x0], axis=-1)
+            h = rms_norm(cat, sb["ln1"])
+            a, c = _decode_attn(sb["attn"], h, cur, cfg, 0, nxt())
+            x = x + a
+            x = x + mlp(sb["mlp"], rms_norm(x, sb["ln2"]), cfg.act)
+            new_caches.append(c)
+        for j in range(cfg.n_layers - n_seg * per):
+            p_l = _stack_slice(params["mamba_tail"], j)
+            x, st = mamba_block(p_l, x, cfg, state=nxt())
+            new_caches.append(st)
+    elif cfg.family == "audio":
+        for i in range(cfg.n_dec_layers):
+            p_l = _stack_slice(params["dec_blocks"], i)
+            c = nxt()
+            h = rms_norm(x, p_l["ln1"])
+            a, cc = _decode_attn(p_l["attn"], h, cur, cfg, 0,
+                                 {"k": c["k"], "v": c["v"]})
+            x = x + a
+            hx = rms_norm(x, p_l["ln_x"])
+            x = x + gqa_cross_from_cache(
+                p_l["cross"], hx, (c["cross_k"], c["cross_v"]), cfg
+            )
+            x = x + mlp(p_l["mlp"], rms_norm(x, p_l["ln2"]), cfg.act)
+            new_caches.append({**cc, "cross_k": c["cross_k"],
+                               "cross_v": c["cross_v"]})
+    logits = model._logits(params, rms_norm(x, params["final_norm"]))
+    return logits[:, 0], tuple(new_caches)

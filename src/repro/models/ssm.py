@@ -1,0 +1,151 @@
+"""Mamba-2 (SSD) block: projections, depthwise conv, SSD scan, gated norm.
+
+Used by mamba2-780m (pure SSM stack) and zamba2-7b (hybrid backbone).
+Serving keeps O(1) per-token state: (conv tail, SSM state) per layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd_scan import ssd, ssd_decode_step
+from .common import ArchConfig, Initializer, rms_norm
+
+
+def init_mamba(init: Initializer, cfg: ArchConfig, L: int) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    K = cfg.d_conv
+    return {
+        "norm": init.tensor((L, d), zero=True),
+        "wz": init.tensor((L, d, di), fan_in=d),
+        "wx": init.tensor((L, d, di), fan_in=d),
+        "wB": init.tensor((L, d, G * N), fan_in=d),
+        "wC": init.tensor((L, d, G * N), fan_in=d),
+        "wdt": init.tensor((L, d, H), fan_in=d),
+        "conv_x": init.tensor((L, K, di), fan_in=K),
+        "conv_B": init.tensor((L, K, G * N), fan_in=K),
+        "conv_C": init.tensor((L, K, G * N), fan_in=K),
+        "A_log": init.tensor((L, H), zero=True),       # A = -exp(A_log)
+        "D": init.tensor((L, H), zero=True),
+        "dt_bias": init.tensor((L, H), zero=True),
+        "out_norm": init.tensor((L, di), zero=True),
+        "wo": init.tensor((L, di, d), fan_in=di),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B, T, Cdim], w: [K, Cdim].
+    ``tail``: [B, K-1, Cdim] cached inputs for decode."""
+    K = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        if tail is None else tail.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)              # [B, T+K-1, C]
+    out = sum(
+        xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(K)
+    )
+    return jax.nn.silu(out)
+
+
+def _final_ssm_state(xc, dt, A, Bc, Cc, cfg):
+    """State after consuming the whole sequence (prefill -> decode handoff).
+    xc: [B,T,H,P], dt: [B,T,H], Bc: [B,T,G,N] -> [B,H,N,P] (f32)."""
+    H = cfg.n_ssm_heads
+    G = cfg.ssm_groups
+    Bh = jnp.repeat(Bc, H // G, axis=2).astype(jnp.float32)  # [B,T,H,N]
+    la = dt * A[None, None, :]                               # [B,T,H]
+    rev = jnp.sum(la, axis=1, keepdims=True) - jnp.cumsum(la, axis=1)
+    w = jnp.exp(rev) * dt                                    # decay s -> T
+    return jnp.einsum("bthn,bthp->bhnp", Bh * w[..., None],
+                      xc.astype(jnp.float32))
+
+
+def mamba_block(
+    p: Dict,                     # single-layer slice
+    x: jnp.ndarray,              # [B, T, d]
+    cfg: ArchConfig,
+    state: Optional[Dict] = None,  # decode: {"conv": [B,K-1,Cc], "ssm": [B,H,N,P]}
+    return_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, T, d = x.shape
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    h = rms_norm(x, p["norm"])
+    z = h @ p["wz"]                                     # [B, T, di]
+    xin = h @ p["wx"]
+    Bin = h @ p["wB"]
+    Cin = h @ p["wC"]
+    dt = jax.nn.softplus(h.astype(jnp.float32) @ p["wdt"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B, T, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H]
+
+    new_state = None
+    if state is None:
+        xc = _causal_conv(xin, p["conv_x"])
+        Bc = _causal_conv(Bin, p["conv_B"])
+        Cc = _causal_conv(Cin, p["conv_C"])
+        y = ssd(
+            xc.reshape(B, T, H, P),
+            dt,
+            A,
+            Bc.reshape(B, T, G, N),
+            Cc.reshape(B, T, G, N),
+        )                                               # [B, T, H, P]
+        if return_state:
+            K = cfg.d_conv
+            conv_in = jnp.concatenate([xin, Bin, Cin], axis=-1)
+            pad = jnp.zeros(
+                (B, max(0, K - 1 - T), conv_in.shape[-1]), conv_in.dtype
+            )
+            tail = jnp.concatenate([pad, conv_in[:, -(K - 1):]], axis=1)
+            S = _final_ssm_state(
+                xc.reshape(B, T, H, P), dt, A,
+                Bc.reshape(B, T, G, N), Cc.reshape(B, T, G, N), cfg,
+            )
+            new_state = {"conv": tail, "ssm": S}
+    else:
+        conv_in = jnp.concatenate([xin, Bin, Cin], axis=-1)  # [B, 1, Cc]
+        tail = state["conv"]                                 # [B, K-1, Cc]
+        full = jnp.concatenate([tail, conv_in], axis=1)
+        w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+        out = sum(full[:, i: i + 1] * w[i][None, None] for i in range(cfg.d_conv))
+        out = jax.nn.silu(out)[:, 0]                         # [B, Cc]
+        di = cfg.d_inner
+        xc = out[:, :di]
+        Bc = out[:, di: di + G * N]
+        Cc = out[:, di + G * N:]
+        S, yh = ssd_decode_step(
+            state["ssm"],
+            xc.reshape(B, H, P),
+            dt[:, 0],
+            A,
+            Bc.reshape(B, G, N),
+            Cc.reshape(B, G, N),
+        )
+        y = yh.reshape(B, 1, H, P)
+        new_state = {"conv": full[:, 1:], "ssm": S}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * (
+        xc.reshape(B, T, H, P) if state is None
+        else xc.reshape(B, 1, H, P)
+    ).astype(jnp.float32)
+    y = y.reshape(B, T, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    return x + y @ p["wo"], new_state
+
+
+def init_mamba_state(cfg: ArchConfig, B: int, dtype) -> Dict:
+    """Per-layer decode state."""
+    Cc = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((B, cfg.d_conv - 1, Cc), dtype),
+        "ssm": jnp.zeros(
+            (B, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+    }

@@ -1,0 +1,22 @@
+from .checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from .elastic import (
+    HeartbeatMonitor,
+    MeshRequirements,
+    choose_mesh_shape,
+    make_mesh_from_devices,
+    reshard_state,
+)
+from .straggler import StragglerConfig, StragglerDetector, rebalance_shards
+
+__all__ = [
+    "CheckpointManager", "latest_step", "restore_checkpoint",
+    "save_checkpoint",
+    "HeartbeatMonitor", "MeshRequirements", "choose_mesh_shape",
+    "make_mesh_from_devices", "reshard_state",
+    "StragglerConfig", "StragglerDetector", "rebalance_shards",
+]

@@ -1,0 +1,198 @@
+"""Checkpoint/restart: atomic, checksummed, double-buffered, async.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        manifest.json      # tree structure, shapes, dtypes, sha256 per leaf
+        leaf_00000.bin     # raw bytes per leaf (bfloat16-safe)
+        ...
+    <dir>/LATEST           # atomic pointer file
+
+Design for 1000+ nodes (documented here, exercised single-host): each
+process writes only the leaves it owns (addressable shards) under
+``leaf_XXXXX.shard_YYY.bin``; the manifest is written by process 0 after a
+barrier; restore re-shards onto whatever mesh the elastic layer chose —
+enabled by storing *global* arrays per leaf here (single-host container).
+
+Write protocol: serialize to ``step_N.tmp-<nonce>`` then ``os.rename`` —
+a crashed writer never corrupts LATEST.  ``CheckpointManager`` keeps the
+last ``keep`` checkpoints and can run saves on a background thread
+(double-buffered: the step's arrays are snapshotted to host first, so
+training continues while bytes hit disk).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_bytes(x) -> Tuple[bytes, str, Tuple[int, ...]]:
+    arr = np.asarray(jax.device_get(x))
+    return arr.tobytes(), str(arr.dtype), tuple(arr.shape)
+
+
+def _restore_leaf(raw: bytes, dtype: str, shape) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes
+        dt = ml_dtypes.bfloat16
+    else:
+        dt = np.dtype(dtype)
+    return np.frombuffer(raw, dtype=dt).reshape(shape).copy()
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Atomic checksummed save; returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + f".tmp-{os.getpid()}-{int(time.time() * 1e6) % 100000}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        raw, dtype, shape = _leaf_bytes(leaf)
+        fn = f"leaf_{i:05d}.bin"
+        with open(os.path.join(tmp, fn), "wb") as f:
+            f.write(raw)
+        manifest["leaves"].append({
+            "file": fn,
+            "dtype": dtype,
+            "shape": list(shape),
+            "sha256": hashlib.sha256(raw).hexdigest(),
+            "bytes": len(raw),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, f".LATEST.tmp-{os.getpid()}")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    template: Any,
+    step: Optional[int] = None,
+    validate: bool = True,
+) -> Tuple[int, Any]:
+    """Restore into the structure of ``template`` (shapes must match).
+    Integrity: every leaf's sha256 is verified unless validate=False."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_t, treedef = jax.tree.flatten(template)
+    if manifest["n_leaves"] != len(leaves_t):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, template "
+            f"{len(leaves_t)} — incompatible structure"
+        )
+    out: List[np.ndarray] = []
+    for i, (meta, tleaf) in enumerate(zip(manifest["leaves"], leaves_t)):
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            raw = f.read()
+        if validate:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(
+                    f"checksum mismatch in {meta['file']} "
+                    f"(checkpoint corrupt)"
+                )
+        arr = _restore_leaf(raw, meta["dtype"], meta["shape"])
+        tshape = tuple(getattr(tleaf, "shape", ()) or ())
+        if tshape != arr.shape:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != template "
+                f"{tshape}"
+            )
+        out.append(arr)
+    return step, jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """keep-last-k + optional async background writer."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        # snapshot to host NOW so training can mutate buffers after return
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.dir, step, host_tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error:
+                e, self._error = self._error, None
+                raise e
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and ".tmp" not in d
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, template: Any) -> Optional[Tuple[int, Any]]:
+        self.wait()
+        if latest_step(self.dir) is None:
+            return None
+        return restore_checkpoint(self.dir, template)

@@ -1,0 +1,98 @@
+"""Elastic scaling: mesh (re)selection after device loss + state re-shard.
+
+Recovery protocol (1000+-node design, exercised here on host devices):
+
+1. A heartbeat/membership layer (the launcher) detects failed hosts and
+   reports the surviving device count.
+2. ``choose_mesh_shape`` picks the largest valid (pod, data, model)
+   factorization that still divides the model's TP requirements —
+   preferring to keep 'model' fixed (TP degree is baked into layouts) and
+   shrinking 'data' first (pure throughput loss, no re-layout).
+3. The persistent collectives are re-initialized (plans are cheap relative
+   to lost work — the paper's init-vs-iteration amortization argument)
+   and the last checkpoint is restored with the *new* shardings.
+
+Straggler mitigation lives in ``straggler.py``; data re-sharding is exact
+because the pipeline is stateless/seekable (see train/data.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRequirements:
+    model_divisors: int            # TP degree must divide this (heads, ...)
+    prefer_model: int = 16
+    min_model: int = 1
+
+
+def choose_mesh_shape(
+    n_devices: int, req: MeshRequirements, multi_pod_size: int = 256
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable mesh from surviving devices.
+
+    Keeps TP ('model') at the largest power-of-two <= prefer_model that
+    divides the model; uses whole pods when n_devices spans several."""
+    model = req.prefer_model
+    while model > req.min_model and (
+        req.model_divisors % model != 0 or n_devices % model != 0
+    ):
+        model //= 2
+    model = max(model, 1)
+    rest = n_devices // model
+    if rest >= 2 and n_devices > multi_pod_size:
+        pods = max(1, n_devices // multi_pod_size)
+        while rest % pods != 0:
+            pods -= 1
+        return (pods, rest // pods, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh_from_devices(
+    shape: Tuple[int, ...], axes: Tuple[str, ...],
+    devices: Optional[List] = None,
+) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def reshard_state(state, specs, new_mesh: Mesh):
+    """Place a (host or differently-sharded) state onto a new mesh."""
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(put, state, specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+class HeartbeatMonitor:
+    """Launcher-side liveness bookkeeping (host simulation).
+
+    Real deployment: every host POSTs a heartbeat each step; the
+    coordinator declares hosts dead after ``timeout_steps`` silent steps
+    and triggers the elastic restart above."""
+
+    def __init__(self, n_hosts: int, timeout_steps: int = 3):
+        self.last_seen = {h: 0 for h in range(n_hosts)}
+        self.timeout = timeout_steps
+        self.step = 0
+
+    def beat(self, host: int):
+        self.last_seen[host] = self.step
+
+    def advance(self) -> List[int]:
+        """Advance one step; return hosts presumed dead."""
+        self.step += 1
+        return [
+            h for h, s in self.last_seen.items()
+            if self.step - s > self.timeout
+        ]

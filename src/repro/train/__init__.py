@@ -1,0 +1,20 @@
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state, lr_at
+from .data import DataConfig, Prefetcher, TokenStream
+from .compression import compress, decompress, ef_compress_tree, init_residual
+from .trainer import (
+    TrainState,
+    TrainerConfig,
+    batch_specs,
+    jit_train_step,
+    make_train_state,
+    make_train_step,
+    state_specs,
+)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_update", "init_opt_state", "lr_at",
+    "DataConfig", "Prefetcher", "TokenStream",
+    "compress", "decompress", "ef_compress_tree", "init_residual",
+    "TrainState", "TrainerConfig", "batch_specs", "jit_train_step",
+    "make_train_state", "make_train_step", "state_specs",
+]

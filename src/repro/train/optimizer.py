@@ -1,0 +1,139 @@
+"""AdamW (own implementation) + LR schedules + gradient clipping.
+
+ZeRO-1 style: optimizer moments live in fp32 and are sharded over the
+'data' axis (spec helper below) while bf16 params stay TP-sharded — the
+standard memory layout for 1000+-chip runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"     # cosine | wsd | constant
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "wsd":
+        # warmup-stable-decay: linear decay over the last 10%
+        tail = 0.1 * cfg.total_steps
+        decay = jnp.clip((cfg.total_steps - s) / jnp.maximum(tail, 1.0),
+                         cfg.min_lr_frac, 1.0)
+    else:  # cosine
+        frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    zeros2 = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros2)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    state: OptState,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step, mu, nu), {"gnorm": gnorm, "lr": lr}
+
+
+def opt_state_specs(params_abstract, param_specs, mesh_axes: Dict[str, int]):
+    """ZeRO-1: shard fp32 moments over 'data' on the first dim that is both
+    unsharded in the param spec and divisible by the data-axis size."""
+    dp = mesh_axes.get("data", 1)
+
+    def shard(leaf, spec: P):
+        if dp <= 1:
+            return spec
+        entries = list(spec) if len(spec) else [None] * len(leaf.shape)
+        while len(entries) < len(leaf.shape):
+            entries.append(None)
+        used = set()
+        for e in entries:
+            if isinstance(e, tuple):
+                used.update(e)
+            elif e is not None:
+                used.add(e)
+        if "data" in used:
+            return spec
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % dp == 0 and leaf.shape[i] > 0:
+                entries[i] = "data"
+                return P(*entries)
+        return spec
+
+    moment_specs = jax.tree.map(
+        shard, params_abstract, param_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    return OptState(step=P(), mu=moment_specs, nu=moment_specs)

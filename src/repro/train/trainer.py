@@ -1,0 +1,158 @@
+"""Trainer: jitted train_step with TP/DP/EP sharding, microbatching,
+remat, ZeRO-1 moments, optional error-feedback gradient compression.
+
+``make_train_step(model, opt_cfg)`` returns (state_specs, train_step) where
+train_step(state, batch) -> (state, metrics) is ready for jax.jit with
+in_shardings/out_shardings derived from the specs — the same artifact the
+multi-pod dry-run lowers and the real launcher executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.lm import Model
+from .compression import ef_compress_tree, init_residual
+from .optimizer import (
+    AdamWConfig,
+    OptState,
+    adamw_update,
+    init_opt_state,
+    opt_state_specs,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    residual: Optional[Any]      # error-feedback state (None if off)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1        # gradient accumulation
+    compress_grads: bool = False
+
+
+def batch_specs(model: Model) -> Dict[str, P]:
+    ba = model.batch_axes
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    fam = model.cfg.family
+    d = {"labels": P(b, None)}
+    if fam == "audio":
+        d["enc_embeds"] = P(b, None, None)
+        d["tokens"] = P(b, None)
+    elif fam == "vlm":
+        d["embeds"] = P(b, None, None)
+        d["positions"] = P(b, None, None)
+    else:
+        d["tokens"] = P(b, None)
+    return d
+
+
+def make_train_state(model: Model, tcfg: TrainerConfig, seed: int = 0,
+                     abstract: bool = False) -> TrainState:
+    params = model.init_params(seed=seed, abstract=abstract)
+    if abstract:
+        opt = jax.eval_shape(init_opt_state, params)
+        res = (jax.eval_shape(init_residual, params)
+               if tcfg.compress_grads else None)
+    else:
+        opt = init_opt_state(params)
+        res = init_residual(params) if tcfg.compress_grads else None
+    return TrainState(params, opt, res)
+
+
+def state_specs(model: Model, tcfg: TrainerConfig) -> TrainState:
+    pspecs = model.param_specs()
+    axes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    params_abs = model.init_params(abstract=True)
+    ospecs = opt_state_specs(params_abs, pspecs, axes)
+    rspecs = (jax.tree.map(lambda s: s, ospecs.mu)
+              if tcfg.compress_grads else None)
+    return TrainState(pspecs, ospecs, rspecs)
+
+
+def make_train_step(model: Model, tcfg: TrainerConfig):
+    """Returns train_step(state, batch) -> (new_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        mb = tcfg.microbatches
+        if mb > 1:
+            B = batch["tokens"].shape[0] if "tokens" in batch else \
+                batch["embeds"].shape[0]
+            assert B % mb == 0
+
+            def micro(i, acc):
+                grads_acc, loss_acc = acc
+                sl = {
+                    k: jax.lax.dynamic_slice_in_dim(v, i * (B // mb),
+                                                    B // mb, axis=0)
+                    for k, v in batch.items()
+                }
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, sl
+                )
+                grads_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), grads_acc, g
+                )
+                return grads_acc, loss_acc + l
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            grads, loss = jax.lax.fori_loop(
+                0, mb, lambda i, acc: micro(i, acc),
+                (zero, jnp.zeros((), jnp.float32)),
+            )
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics_extra = {}
+        else:
+            (loss, metrics_extra), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(state.params, batch)
+
+        residual = state.residual
+        if tcfg.compress_grads:
+            grads, residual = ef_compress_tree(grads, residual)
+
+        new_params, new_opt, om = adamw_update(
+            tcfg.opt, state.params, grads, state.opt
+        )
+        metrics = {"loss": loss, **om}
+        if isinstance(metrics_extra, dict):
+            metrics.update({k: v for k, v in metrics_extra.items()})
+        return TrainState(new_params, new_opt, residual), metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, tcfg: TrainerConfig):
+    """jit with explicit in/out shardings (what dryrun.py lowers)."""
+    specs = state_specs(model, tcfg)
+    bspecs = batch_specs(model)
+    mesh = model.mesh
+
+    def shardify(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda s: isinstance(s, P),
+        )
+
+    step = make_train_step(model, tcfg)
+    return jax.jit(
+        step,
+        in_shardings=(shardify(specs), shardify(bspecs)),
+        out_shardings=(shardify(specs), None),
+        donate_argnums=(0,),
+    ), specs

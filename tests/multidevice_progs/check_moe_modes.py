@@ -1,0 +1,88 @@
+"""Subprocess: MoE dispatch strategies agree on a (pod,data,model)=(2,2,2)
+mesh — the paper's standard/partial/full mapped onto EP must be numerically
+identical transports (ample capacity => no drops)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import reduced
+from repro.models.moe import MODES, make_moe_plan, moe_layer, init_moe
+from repro.models.common import Initializer
+
+
+def dense_oracle(x, params, cfg, plan_topk):
+    """Route + compute every token against its experts directly (numpy-ish)."""
+    import numpy as np
+    xf = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
+    router = np.asarray(params["router"], np.float32)
+    wg = np.asarray(params["w_gate"], np.float32)
+    wu = np.asarray(params["w_up"], np.float32)
+    wd = np.asarray(params["w_down"], np.float32)
+    logits = xf @ router
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = e / e.sum(-1, keepdims=True)
+    k = plan_topk
+    out = np.zeros_like(xf)
+    order = np.argsort(-probs, axis=-1, kind="stable")[:, :k]
+    for t in range(xf.shape[0]):
+        ws = probs[t, order[t]]
+        ws = ws / ws.sum()
+        for j, e_id in enumerate(order[t]):
+            h = xf[t] @ wg[e_id]
+            h = (h * (1.0 / (1.0 + np.exp(-h)))) * (xf[t] @ wu[e_id])
+            out[t] += ws[j] * (h @ wd[e_id])
+    return out.reshape(x.shape)
+
+
+def main():
+    assert jax.device_count() == 8
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg0 = reduced("mixtral-8x7b")
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float32,
+                            "n_experts": 8, "top_k": 2})
+    rng = np.random.default_rng(0)
+    B, S, D = 4, 8, cfg.d_model
+    x = jnp.asarray(rng.normal(size=(B, S, D)).astype(np.float32))
+    x = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None, None)))
+
+    results = {}
+    for mode in MODES:
+        for ep_over_pods in ([False, True] if mode != "dense" else [False]):
+            plan = make_moe_plan(cfg, mesh, tokens_per_lane=B * S,
+                                 mode=mode, ep_over_pods=ep_over_pods,
+                                 cap_factor=8.0, dedup_factor=1.0)
+            from repro.models.moe import moe_param_specs
+            init = Initializer(3, jnp.float32)
+            params = {k: v[0] for k, v in
+                      init_moe(init, cfg, 1, plan.e_phys).items()}
+            specs = {k: P(*s[1:]) for k, s in
+                     moe_param_specs(cfg, plan).items()}
+            pin = {
+                k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+                for k, v in params.items() if k in specs
+            }
+            y, aux = jax.jit(
+                lambda xx, pp: moe_layer(xx, pp, plan, cfg, mesh,
+                                         ("pod", "data"))
+            )(x, pin)
+            key = f"{mode}{'+pods' if ep_over_pods else ''}"
+            results[key] = np.asarray(y)
+            print(f"{key:16s} aux={float(aux):.4f} |y|={np.abs(y).mean():.4f}")
+
+    # replication differs between plans (e_phys) but logical routing must
+    # agree; compare every mode against flat a2a (no pods)
+    ref = results["a2a"]
+    for key, val in results.items():
+        err = np.abs(val - ref).max()
+        print(f"{key:16s} max|diff vs a2a| = {err:.2e}")
+        assert err < 1e-4, (key, err)
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""ELL SpMV + MoE pack/combine kernels vs oracles (+ AMG matrices)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.amg import diffusion_2d
+from repro.kernels.moe_pack import combine_rows_ref, gather_rows_ref
+from repro.kernels.moe_pack.moe_pack import combine_rows, gather_rows
+from repro.kernels.spmv_ell import csr_to_ell, spmv_ell_ref
+from repro.kernels.spmv_ell.spmv_ell import spmv_ell
+
+
+@pytest.mark.parametrize("R,K,N,br", [(64, 4, 32, 16), (128, 7, 100, 32),
+                                      (256, 11, 257, 64)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_spmv_random(R, K, N, br, dtype):
+    rng = np.random.default_rng(0)
+    cols = rng.integers(0, N, size=(R, K)).astype(np.int32)
+    vals = rng.normal(size=(R, K)).astype(dtype)
+    x = rng.normal(size=N).astype(dtype)
+    want = spmv_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x))
+    got = spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x),
+                   block_rows=br, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_amg_matrix():
+    """End-to-end on a real AMG matrix via csr_to_ell."""
+    A = diffusion_2d(16, 16)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=A.ncols).astype(np.float32)
+    # pad slot: one extra zero entry at index A.ncols
+    cols, vals = csr_to_ell(A.indptr, A.indices, A.data, A.nrows,
+                            pad_col=A.ncols, block_rows=64)
+    xp = np.concatenate([x, [0.0]]).astype(np.float32)
+    got = spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(xp),
+                   block_rows=64, interpret=True)
+    want = A.matvec(x.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(got)[: A.nrows], want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,D,M,bm,bd", [(32, 16, 64, 16, 16),
+                                         (100, 64, 128, 32, 32),
+                                         (57, 128, 96, 48, 64)])
+def test_gather_rows(N, D, M, bm, bd):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N, size=M).astype(np.int32))
+    want = gather_rows_ref(x, idx)
+    got = gather_rows(x, idx, block_m=bm, block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("K", [1, 2, 6])
+def test_combine_rows(K):
+    rng = np.random.default_rng(3)
+    N, D, T = 64, 32, 48
+    buf = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, N, size=(T, K)).astype(np.int32))
+    w = jnp.asarray(rng.random((T, K)).astype(np.float32))
+    want = combine_rows_ref(buf, idx, w)
+    got = combine_rows(buf, idx, w, block_m=16, block_d=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

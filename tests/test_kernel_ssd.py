@@ -1,0 +1,73 @@
+"""SSD scan kernel + chunked ref vs per-timestep recurrence oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import use_backend
+from repro.kernels.ssd_scan import ssd, ssd_chunked_ref, ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_h
+
+
+def make_inputs(rng, H=4, T=64, P=16, N=8, dtype=np.float32):
+    x = rng.normal(size=(H, T, P)).astype(dtype)
+    dt = (0.01 + 0.2 * rng.random(size=(H, T))).astype(dtype)
+    A = (-0.5 - rng.random(H)).astype(dtype)
+    B = rng.normal(size=(H, T, N)).astype(dtype)
+    C = rng.normal(size=(H, T, N)).astype(dtype)
+    return map(jnp.asarray, (x, dt, A, B, C))
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (128, 32), (96, 32)])
+def test_chunked_ref_matches_scan(T, chunk):
+    rng = np.random.default_rng(0)
+    x, dt, A, B, C = make_inputs(rng, T=T)
+    want = ssd_ref(x, dt, A, B, C)
+    got = ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("H,T,P,N,chunk", [
+    (2, 32, 8, 8, 8),
+    (4, 64, 16, 8, 16),
+    (3, 128, 32, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_kernel_matches_scan(H, T, P, N, chunk, dtype):
+    rng = np.random.default_rng(1)
+    dt_np = np.float32
+    x, dt, A, B, C = make_inputs(rng, H=H, T=T, P=P, N=N, dtype=dt_np)
+    if dtype == "bfloat16":
+        x = x.astype(jnp.bfloat16)
+    want = ssd_ref(x.astype(jnp.float32), dt, A, B, C)
+    got = ssd_scan_h(x, dt, A, B, C, chunk=chunk, interpret=True)
+    tol = 3e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_batched_op_group_broadcast():
+    """ops.ssd with grouped B/C (G < H) against the manual repeat."""
+    rng = np.random.default_rng(2)
+    Bt, T, H, G, P, N = 2, 32, 4, 2, 8, 8
+    x = jnp.asarray(rng.normal(size=(Bt, T, H, P)).astype(np.float32))
+    dt = jnp.asarray((0.01 + 0.2 * rng.random((Bt, T, H))).astype(np.float32))
+    A = jnp.asarray((-1.0 - rng.random(H)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(Bt, T, G, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(Bt, T, G, N)).astype(np.float32))
+    with use_backend("pallas_interpret"):
+        got = ssd(x, dt, A, B, C, chunk=8)
+    # oracle: per batch, repeat groups then per-timestep scan
+    Bh = jnp.repeat(B, H // G, axis=2)
+    Ch = jnp.repeat(C, H // G, axis=2)
+    for b in range(Bt):
+        want = ssd_ref(
+            jnp.moveaxis(x[b], 1, 0), jnp.moveaxis(dt[b], 1, 0), A,
+            jnp.moveaxis(Bh[b], 1, 0), jnp.moveaxis(Ch[b], 1, 0),
+        )
+        np.testing.assert_allclose(
+            np.asarray(jnp.moveaxis(got[b], 1, 0)), np.asarray(want),
+            rtol=1e-4, atol=1e-4,
+        )

@@ -1,0 +1,170 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Invariants under test:
+  P1  Every strategy delivers exactly the requested values (conservation +
+      correctness) for ANY pattern/topology.
+  P2  Aggregation never increases the max inter-region message count, and
+      bounds it by the number of remote regions.
+  P3  Dedup never increases inter-region bytes and never changes results.
+  P4  Round schedules are valid partial permutations covering all wire
+      messages exactly once.
+  P5  Load balancing (LPT) is within 2x of the ideal max load.
+  P6  The cost model is monotone in message sizes.
+  P7  MoE capacity packing: slots are unique, within bounds, and respect
+      per-expert capacity.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CommPattern,
+    LASSEN,
+    Topology,
+    build_plan,
+    color_rounds,
+    plan_time,
+)
+from repro.core.locality import balance_assignments
+
+
+@st.composite
+def patterns(draw):
+    n_regions = draw(st.integers(2, 4))
+    ppr = draw(st.integers(1, 4))
+    n_procs = n_regions * ppr
+    n_per = draw(st.integers(1, 12))
+    n_global = n_procs * n_per
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    needs = []
+    for q in range(n_procs):
+        k = int(rng.integers(0, min(n_global, 20)))
+        needs.append(np.sort(rng.choice(n_global, size=k, replace=False)))
+    offsets = np.arange(n_procs + 1) * n_per
+    return CommPattern.from_block_partition(needs, offsets), \
+        Topology(n_procs, ppr), seed
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns(), st.sampled_from(["standard", "partial", "full"]))
+def test_p1_delivery_correct(pt, strategy):
+    pattern, topo, seed = pt
+    plan = build_plan(pattern, topo, strategy)
+    rng = np.random.default_rng(seed + 1)
+    vals = [rng.normal(size=(int(n),)) for n in pattern.n_local]
+    got = plan.execute_numpy(vals)
+    for q in range(pattern.n_procs):
+        want = np.array([
+            vals[pattern.owner_proc[g]][pattern.owner_slot[g]]
+            for g in pattern.needs[q]
+        ])
+        np.testing.assert_array_equal(got[q], want.reshape(got[q].shape))
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns())
+def test_p2_aggregation_bounds_inter_messages(pt):
+    pattern, topo, _ = pt
+    std = build_plan(pattern, topo, "standard")
+    par = build_plan(pattern, topo, "partial")
+    # per-proc inter messages bounded by remote region count
+    assert par.stats.max_inter_msgs() <= topo.n_regions - 1 + 1
+    assert (par.stats.totals()["inter_msgs"]
+            <= max(std.stats.totals()["inter_msgs"],
+                   topo.n_regions * (topo.n_regions - 1)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns())
+def test_p3_dedup_never_worse_and_equal_results(pt):
+    pattern, topo, seed = pt
+    par = build_plan(pattern, topo, "partial")
+    ful = build_plan(pattern, topo, "full")
+    assert (ful.stats.totals()["inter_bytes"]
+            <= par.stats.totals()["inter_bytes"])
+    rng = np.random.default_rng(seed + 2)
+    vals = [rng.normal(size=(int(n),)) for n in pattern.n_local]
+    a = par.execute_numpy(vals)
+    b = ful.execute_numpy(vals)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+@settings(max_examples=40, deadline=None)
+@given(patterns(), st.sampled_from(["standard", "partial", "full"]))
+def test_p4_rounds_partition_wire_messages(pt, strategy):
+    pattern, topo, _ = pt
+    plan = build_plan(pattern, topo, strategy)
+    for step in plan.steps:
+        wire = [(m.src, m.dst, m.size) for m in step.messages
+                if m.src != m.dst and m.size > 0]
+        scheduled = []
+        for rnd in color_rounds(step.messages):
+            srcs = [s for s, _ in rnd.pairs]
+            dsts = [d for _, d in rnd.pairs]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+            scheduled.extend(
+                (s, d, len(si)) for (s, d), si in zip(rnd.pairs, rnd.src_idx)
+            )
+        assert sorted(scheduled) == sorted(wire)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=40),
+       st.integers(1, 8))
+def test_p5_lpt_balance(weights, n_workers):
+    w = {i: v for i, v in enumerate(weights)}
+    assign = balance_assignments(w, n_workers)
+    loads = np.zeros(n_workers)
+    for k, wk in assign.items():
+        loads[wk] += w[k]
+    ideal = max(sum(weights) / n_workers, max(weights))
+    assert loads.max() <= 2 * ideal
+
+
+@settings(max_examples=30, deadline=None)
+@given(patterns())
+def test_p6_costmodel_monotone(pt):
+    pattern, topo, _ = pt
+    plan8 = build_plan(pattern, topo, "standard", value_bytes=8)
+    plan16 = build_plan(pattern, topo, "standard", value_bytes=16)
+    assert plan_time(plan16, LASSEN) >= plan_time(plan8, LASSEN) - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 16), st.integers(1, 64), st.integers(1, 4),
+       st.integers(2, 16))
+def test_p7_capacity_pack_invariants(seed, n_tokens, k, e_phys):
+    import jax.numpy as jnp
+    from repro.models.moe import MoEPlan, capacity_pack
+
+    rng = np.random.default_rng(seed)
+    k = min(k, e_phys)
+    plan = MoEPlan(
+        mode="a2a", ep_axes=("model",), ep_size=1, e_log=e_phys,
+        e_phys=e_phys, e_per_dev=e_phys, top_k=k,
+        capacity=int(rng.integers(1, 8)), region_axis="model",
+        region_size=1, devs_per_region=1, uniq_capacity=8, cap_factor=1.0,
+    )
+    phys = np.stack([
+        rng.choice(e_phys, size=k, replace=False) for _ in range(n_tokens)
+    ]).astype(np.int32)
+    slot, keep, slot_token = map(
+        np.asarray, capacity_pack(jnp.asarray(phys), plan)
+    )
+    C = plan.capacity
+    kept = slot[keep]
+    # slots unique and in range
+    assert len(np.unique(kept)) == len(kept)
+    assert np.all(kept < e_phys * C)
+    # per-expert occupancy <= capacity
+    experts = kept // C
+    _, counts = np.unique(experts, return_counts=True)
+    assert np.all(counts <= C)
+    # inverse map consistent
+    tok = np.repeat(np.arange(n_tokens), k)[keep.reshape(-1)]
+    assert np.all(slot_token[kept] == tok)
+    # dropped slots point at sentinel
+    assert np.all(slot[~keep] == e_phys * C)

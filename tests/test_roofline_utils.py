@@ -1,0 +1,83 @@
+"""Roofline derivation utilities + shape applicability rules."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get
+from repro.configs.shapes import SHAPES, applicable, skip_reason
+from repro.launch.roofline import (
+    HBM_BW,
+    PEAK_FLOPS,
+    active_param_count,
+    analytic_attention_flops,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[128,256]{1,0} all-gather(bf16[8,256]{1,0} %x), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %ars = (f32[512]{0}, f32[512]{0}) all-reduce-start(f32[512]{0} %z)
+  %a2a = f32[64,32]{1,0} all-to-all(f32[64,32]{1,0} %w), dimensions={0}
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %v)
+  %dot = f32[64,64]{1,0} dot(f32[64,64]{1,0} %a, f32[64,64]{1,0} %b)
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-gather"] == 128 * 256 * 2
+    assert got["all-reduce"] == 1024 * 4 + 2 * 512 * 4
+    assert got["all-to-all"] == 64 * 32 * 4
+    assert got["collective-permute"] == 100
+    assert got["reduce-scatter"] == 0
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(
+        flops_dev=PEAK_FLOPS,          # 1 s compute
+        hbm_bytes_dev=HBM_BW * 2.0,    # 2 s memory
+        collective_bytes_dev=0.0,
+        chips=256,
+    )
+    assert t["bottleneck"] == "memory"
+    assert t["step_s_lower_bound"] == pytest.approx(2.0)
+
+
+def test_active_params_moe_less_than_total():
+    cfg = get("mixtral-8x7b")
+    assert active_param_count(cfg) < cfg.param_count()
+    # top-2 of 8 experts: active ~ total * (2/8) on the expert share
+    dense = get("qwen2-0.5b")
+    assert active_param_count(dense) == dense.param_count()
+
+
+def test_model_flops_conventions():
+    cfg = get("qwen2-0.5b")
+    n = cfg.param_count()
+    assert model_flops(cfg, "train", 1000) == pytest.approx(6.0 * n * 1000)
+    assert model_flops(cfg, "decode", 10) == pytest.approx(2.0 * n * 10)
+
+
+def test_attention_flops_window_clips():
+    cfg = get("mixtral-8x7b")  # SWA 4096
+    full = analytic_attention_flops(cfg, B=1, Tq=32768, Tk=32768)
+    cfg2 = get("nemotron-4-15b")  # full attention
+    causal = analytic_attention_flops(cfg2, B=1, Tq=32768, Tk=32768)
+    # windowed layers see at most 4096 keys -> far fewer flops per head
+    per_head_w = full / (cfg.n_layers * cfg.n_heads * cfg.head_dim)
+    per_head_f = causal / (cfg2.n_layers * cfg2.n_heads * cfg2.head_dim)
+    assert per_head_w < per_head_f
+
+
+def test_shape_applicability_rules():
+    # 40 cells total; long_500k skipped exactly for pure full-attn archs
+    skips = [(a, s) for a in ARCHS for s in SHAPES if not applicable(a, s)]
+    assert all(s == "long_500k" for _, s in skips)
+    assert {a for a, _ in skips} == {
+        "nemotron-4-15b", "qwen1.5-0.5b", "qwen2-0.5b", "qwen2-vl-2b",
+        "deepseek-v2-lite-16b", "seamless-m4t-medium",
+    }
+    assert applicable("mamba2-780m", "long_500k")
+    assert applicable("mixtral-8x7b", "long_500k")  # sliding window
+    assert skip_reason("nemotron-4-15b", "long_500k") is not None
+    assert len(list(SHAPES)) * len(ARCHS) == 40
