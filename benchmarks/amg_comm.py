@@ -4,8 +4,13 @@ Builds the paper's workload once per process: rotated anisotropic diffusion
 (theta=45deg, eps=1e-3) -> classical AMG hierarchy -> per-level SpMV
 communication patterns for a given process count -> plans for every
 strategy.  Message counts/bytes are EXACT plan quantities; network *times*
-are modeled (locality-aware max-rate, core.costmodel) because this
-container has no network — both are labeled in the output.
+for paper-scale process counts are modeled (locality-aware max-rate,
+core.costmodel) because this container has no network — both are labeled in
+the output.  In addition, :func:`level_selection` reports the Section-5
+selector's per-level choice, and :func:`measured_device_exchange` times the
+*real* jitted device executor on however many host-platform devices are
+available (run under ``test.sh`` / ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` for a meaningful mesh) — measured, not modeled.
 """
 from __future__ import annotations
 
@@ -18,9 +23,12 @@ import numpy as np
 from repro.amg import build_hierarchy, diffusion_2d
 from repro.core import (
     LASSEN,
+    SelectionReport,
     Topology,
     build_plan,
+    default_plan_cache,
     plan_time,
+    select_plan,
 )
 from repro.core.costmodel import step_time
 from repro.sparse import partition_csr
@@ -80,3 +88,85 @@ def modeled_level_times(rows: int, n_procs: int, params=LASSEN):
         s: [plan_time(p, params) for p, _ in plans[s]]
         for s in STRATEGIES
     }
+
+
+def bench_topology(n_procs: int, procs_per_region: int | None = None) -> Topology:
+    """Paper's region size where possible; on small device counts fall back
+    to >= 2 regions so locality-aware strategies remain meaningful.  An
+    explicitly passed ``procs_per_region`` is honored verbatim (Topology
+    validates divisibility)."""
+    if procs_per_region is not None:
+        return Topology(n_procs, procs_per_region)
+    ppr = min(PROCS_PER_REGION, n_procs)
+    if ppr == n_procs and n_procs > 1:
+        ppr = max(1, n_procs // 2)
+    while n_procs % ppr:
+        ppr -= 1
+    return Topology(n_procs, ppr)
+
+
+def level_selection(
+    rows: int, n_procs: int, params=LASSEN,
+    procs_per_region: int | None = None,
+) -> List[Tuple[int, str, SelectionReport]]:
+    """Section-5 dynamic selector per level: [(level, chosen, report)]."""
+    out = []
+    topo = bench_topology(n_procs, procs_per_region)
+    for lvl, (pattern, _n) in enumerate(level_patterns(rows, n_procs)):
+        _plan, report = select_plan(
+            pattern, topo, params, value_bytes=VALUE_BYTES
+        )
+        out.append((lvl, report.chosen, report))
+    return out
+
+
+def measured_device_exchange(
+    rows: int,
+    n_procs: int | None = None,
+    procs_per_region: int | None = None,
+    strategy: str = "auto",
+    params=LASSEN,
+    iters: int = 30,
+    warmup: int = 5,
+) -> List[Tuple[int, str, float]]:
+    """MEASURED per-level device exchange wall time on the local mesh.
+
+    Builds each level's persistent collective (through the process-wide plan
+    cache), binds its executor on a 1-D mesh over the available devices, and
+    times it with the shared ``core.collectives.time_executor`` protocol in
+    float64 — the same value width the plans and the cost model assume
+    (VALUE_BYTES=8), so measured and modeled numbers describe the same wire
+    volume.  ``params`` drives the ``auto`` selector; keep it equal to the
+    one given to :func:`level_selection` when comparing the two.  Returns
+    [(level, strategy, seconds_per_exchange)]; levels without ghosts report
+    0.0.  Requires ``n_procs`` (default: all host devices) devices visible.
+    """
+    import jax
+
+    from repro.core import time_executor
+
+    n_procs = n_procs or jax.device_count()
+    if jax.device_count() < n_procs:
+        raise RuntimeError(
+            f"need {n_procs} devices, have {jax.device_count()} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count (see test.sh)"
+        )
+    mesh = jax.make_mesh((n_procs,), ("proc",))
+    topo = bench_topology(n_procs, procs_per_region)
+    cache = default_plan_cache()
+    out = []
+    assert VALUE_BYTES == 8  # float64 wire values, matching the model
+    for lvl, (pattern, _n) in enumerate(level_patterns(rows, n_procs)):
+        coll = cache.collective(pattern, topo, strategy,
+                                value_bytes=VALUE_BYTES, params=params)
+        if pattern.total_ghosts() == 0:
+            out.append((lvl, coll.strategy, 0.0))
+            continue
+        exchange = cache.executor(pattern, topo, mesh, "proc", strategy,
+                                  value_bytes=VALUE_BYTES, params=params)
+        secs = time_executor(
+            exchange, n_procs, int(pattern.n_local.max()),
+            dtype=np.float64, iters=iters, warmup=warmup,
+        )
+        out.append((lvl, coll.strategy, secs))
+    return out

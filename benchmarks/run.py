@@ -15,6 +15,43 @@ import sys
 import time
 
 
+def measured_exchange_rows(rows: int):
+    """Per-level MEASURED device exchange (auto-selected strategy) on the
+    local host-platform mesh; a small problem keeps setup fast.  kind=
+    measured-device distinguishes these from the modeled network rows."""
+    import jax
+
+    # measured exchanges must move 8-byte values to be comparable with the
+    # VALUE_BYTES=8 plan model; without this jnp silently downcasts to f32
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import LASSEN
+
+    from .amg_comm import level_selection, measured_device_exchange
+
+    bench_rows = min(rows, 65_536)
+    n_procs = jax.device_count()
+    # one machine model for BOTH the selector report and the measured run,
+    # so the strategy column and modeled_us describe the same choice
+    params = LASSEN
+    selected = {
+        lvl: rep
+        for lvl, _chosen, rep in level_selection(bench_rows, n_procs, params)
+    }
+    out = []
+    for lvl, strategy, secs in measured_device_exchange(
+        bench_rows, n_procs, params=params
+    ):
+        rep = selected.get(lvl)
+        modeled = (f"modeled_us={rep.modeled_times[strategy] * 1e6:.1f}"
+                   if rep and strategy in rep.modeled_times else "")
+        out.append(
+            (f"measured_exchange/L{lvl}", secs * 1e6,
+             f"kind=measured-device|strategy={strategy}|{modeled}")
+        )
+    return out
+
+
 def main() -> None:
     rows = int(os.environ.get("REPRO_BENCH_ROWS", 524_288))
     t_start = time.time()
@@ -29,6 +66,7 @@ def main() -> None:
         ("fig12", lambda: paper_figs.fig12_strong_scaling(rows)),
         ("fig13", lambda: paper_figs.fig13_weak_scaling()),
         ("amg", paper_figs.amg_solver_convergence),
+        ("measured_exchange", lambda: measured_exchange_rows(rows)),
         ("roofline", roofline_report.rows),
     ]
     print("name,us_per_call,derived")

@@ -3,6 +3,12 @@
 The solve phase is where the paper measures communication: one SpMV-shaped
 exchange per level per iteration.  ``Hierarchy.levels[k].A`` supplies the
 communication pattern analyzed by the benchmarks.
+
+This module is the HOST reference solver.  The device-resident distributed
+solve — every level partitioned, halos through persistent neighborhood
+collectives, the whole V-cycle jitted — lives in
+:mod:`repro.amg.distributed` (``DistributedHierarchy.setup`` /
+``.solve``) and is validated against this solver's residual history.
 """
 from __future__ import annotations
 
@@ -23,10 +29,20 @@ class Level:
     rho: float = 0.0         # spectral-radius estimate of D^-1 A (Chebyshev)
 
 
+def inv_diag(A: CSR) -> np.ndarray:
+    """Guarded inverse diagonal (0 where the diagonal is 0).
+
+    The single definition shared by the host smoothers and the device
+    solver (``amg.distributed``), which must stay arithmetically identical
+    for the host/device residual-history cross-check to hold.
+    """
+    d = A.diagonal()
+    return np.where(d != 0, 1.0 / np.where(d == 0, 1.0, d), 0.0)
+
+
 def estimate_rho(A: CSR, iters: int = 12, seed: int = 0) -> float:
     """Power iteration on D^{-1} A (the Chebyshev smoother interval)."""
-    d = A.diagonal()
-    dinv = np.where(d != 0, 1.0 / np.where(d == 0, 1.0, d), 0.0)
+    dinv = inv_diag(A)
     rng = np.random.default_rng(seed)
     x = rng.normal(size=A.nrows)
     x /= np.linalg.norm(x) + 1e-300
@@ -102,8 +118,7 @@ def build_hierarchy(
 
 def jacobi(A: CSR, x: np.ndarray, b: np.ndarray, omega: float = 2.0 / 3.0,
            iters: int = 1) -> np.ndarray:
-    d = A.diagonal()
-    dinv = np.where(d != 0, 1.0 / np.where(d == 0, 1.0, d), 0.0)
+    dinv = inv_diag(A)
     for _ in range(iters):
         x = x + omega * dinv * (b - A.matvec(x))
     return x
@@ -115,8 +130,7 @@ def chebyshev(A: CSR, x: np.ndarray, b: np.ndarray, rho: float,
     (hypre-style), vectorized — a strong smoother without Gauss-Seidel's
     sequential dependence (which would serialize across the distributed
     rows and is why hypre offers l1-Jacobi/Chebyshev at scale)."""
-    d = A.diagonal()
-    dinv = np.where(d != 0, 1.0 / np.where(d == 0, 1.0, d), 0.0)
+    dinv = inv_diag(A)
     upper = 1.1 * rho
     lower = lower_frac * rho
     theta = 0.5 * (upper + lower)

@@ -1,0 +1,98 @@
+"""Version-compatibility shims for the range of JAX releases this repo meets.
+
+``jax.sharding.AxisType`` (and the matching ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist in newer JAX releases; older ones (e.g. the
+0.4.x line installed in the CPU container) have neither.  Likewise
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``.
+Model code that wants Auto axis semantics goes through :func:`make_mesh_auto`
+instead of touching ``AxisType`` directly; anything that needs the enum
+imports :data:`AxisType` from here (``None`` when unavailable), and all
+``shard_map`` users import it from here.
+
+Importing this module does not initialize any jax backend, so it is safe to
+import before ``XLA_FLAGS`` is finalized (the dry-run sets flags before the
+first device query).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+try:  # JAX >= 0.6-ish: explicit/auto/manual axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # older JAX: no axis types — meshes are implicitly Auto
+    AxisType = None
+
+try:  # new home (jax.shard_map, JAX >= 0.5)
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # old home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(_inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f=None, **kwargs):
+    """``shard_map`` with the replication-check kwarg normalized.
+
+    New JAX calls it ``check_vma``, old JAX ``check_rep``; callers may pass
+    either and the one the installed JAX understands is forwarded.
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if f is None:
+        return _shard_map(**kwargs)
+    return _shard_map(f, **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict across JAX versions.
+
+    Old JAX returns a one-element list of dicts (one per device assignment);
+    new JAX returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the class rename.
+
+    New JAX: ``pallas.tpu.CompilerParams``; old JAX: ``TPUCompilerParams``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh_auto(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with every axis marked Auto where supported.
+
+    On JAX without ``AxisType`` the plain mesh already behaves as Auto, so
+    the kwarg is simply dropped.
+    """
+    import inspect
+
+    import jax
+
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if (
+        AxisType is not None
+        and "axis_types" in inspect.signature(jax.make_mesh).parameters
+    ):
+        kwargs["axis_types"] = (AxisType.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

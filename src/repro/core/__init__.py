@@ -1,5 +1,12 @@
 """Core: locality-aware persistent neighborhood collectives (the paper's
 contribution), planned on host and executed as shard_map collective programs.
+
+Layers: ``plan`` (patterns/plans/round schedules) -> ``locality`` (the three
+aggregation strategies) -> ``selection`` (Section-5 dynamic selector) ->
+``collectives`` (device executor) -> ``neighborhood`` (the
+``NeighborAlltoallV`` facade) -> ``cache`` (plan/executor cache keyed on
+pattern fingerprints, amortizing init across solves — the entry point for
+anything that exchanges repeatedly, e.g. ``amg.distributed``).
 """
 from .plan import (
     CommPattern,
@@ -20,17 +27,25 @@ from .collectives import (
     build_device_plan,
     make_executor,
     pack_local_values,
+    time_executor,
     unpack_ghosts,
 )
 from .neighborhood import NeighborAlltoallV
+from .cache import (
+    PlanCache,
+    default_plan_cache,
+    pattern_fingerprint,
+    plan_cache_key,
+)
 
 __all__ = [
+    "PlanCache", "default_plan_cache", "pattern_fingerprint", "plan_cache_key",
     "CommPattern", "CommPlan", "CommStep", "Message", "PlanStats", "StepStats",
     "Topology", "color_rounds", "padded_wire_volume",
     "STRATEGIES", "build_plan", "plan_full", "plan_partial", "plan_standard",
     "LASSEN", "MACHINES", "TPU_V5E", "MachineParams", "plan_time",
     "SelectionReport", "per_pattern_best", "select_plan",
     "DevicePlan", "build_device_plan", "make_executor",
-    "pack_local_values", "unpack_ghosts",
+    "pack_local_values", "time_executor", "unpack_ghosts",
     "NeighborAlltoallV",
 ]

@@ -1,0 +1,159 @@
+"""Persistent plan/executor cache — ``MPI_*_init`` semantics across solves.
+
+MPI's persistent neighborhood collectives amortize the expensive init
+(plan construction, leader election, dedup) over the iterations of *one*
+solve.  This cache extends the amortization across solves and across
+operators that share a communication pattern: repeated AMG cycles on the
+same matrix, a rebuilt hierarchy on an unchanged grid, or several operators
+whose halos coincide all hit the same entry.
+
+Entries are keyed on a *pattern fingerprint* — a content hash of the
+pattern's ownership/needs arrays plus topology, strategy, value width and
+machine params — so two equal patterns hit regardless of object identity.
+Bound device executors (which carry ``device_put`` index arrays) are cached
+one level down, keyed additionally on (mesh, axis_name).
+
+Entry points:
+
+* :func:`pattern_fingerprint` — content hash of a :class:`CommPattern`.
+* :meth:`PlanCache.collective` — cached ``NeighborAlltoallV.init``.
+* :meth:`PlanCache.executor` — cached ``collective.bind(mesh, axis)``.
+* :func:`default_plan_cache` — process-wide instance (used by
+  ``amg.distributed`` and the benchmarks unless a private cache is passed).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .costmodel import MachineParams, TPU_V5E
+from .neighborhood import NeighborAlltoallV
+from .plan import CommPattern, Topology
+
+
+def pattern_fingerprint(pattern: CommPattern) -> str:
+    """Content hash of a pattern: equal content -> equal fingerprint."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(pattern.owner_proc).tobytes())
+    h.update(np.ascontiguousarray(pattern.owner_slot).tobytes())
+    h.update(np.ascontiguousarray(pattern.n_local).tobytes())
+    for need in pattern.needs:
+        h.update(np.ascontiguousarray(need).tobytes())
+        h.update(b"|")
+    return h.hexdigest()
+
+
+def plan_cache_key(
+    pattern: CommPattern,
+    topo: Topology,
+    strategy: str,
+    value_bytes: int,
+    params: MachineParams,
+) -> Tuple:
+    """Full cache key: everything ``NeighborAlltoallV.init`` depends on.
+
+    ``params`` matters because ``strategy="auto"`` selects per machine
+    model; the frozen dataclass itself is the key component (not just its
+    name) so a re-calibrated params object with an unchanged name cannot
+    hit a plan selected under the old rates.
+    """
+    return (
+        pattern_fingerprint(pattern),
+        topo.n_procs,
+        topo.procs_per_region,
+        strategy,
+        value_bytes,
+        params,
+    )
+
+
+@dataclass
+class PlanCache:
+    """Cache of initialized collectives and bound device executors."""
+
+    hits: int = 0
+    misses: int = 0
+    exec_hits: int = 0
+    exec_misses: int = 0
+    init_seconds_spent: float = 0.0
+    init_seconds_saved: float = 0.0
+    _colls: Dict[Tuple, NeighborAlltoallV] = field(default_factory=dict)
+    _execs: Dict[Tuple, Callable] = field(default_factory=dict)
+
+    def collective(
+        self,
+        pattern: CommPattern,
+        topo: Topology,
+        strategy: str = "auto",
+        value_bytes: int = 8,
+        params: MachineParams = TPU_V5E,
+    ) -> NeighborAlltoallV:
+        """Cached ``NeighborAlltoallV.init`` — a hit skips re-planning."""
+        key = plan_cache_key(pattern, topo, strategy, value_bytes, params)
+        coll = self._colls.get(key)
+        if coll is not None:
+            self.hits += 1
+            self.init_seconds_saved += coll.init_seconds
+            return coll
+        self.misses += 1
+        coll = NeighborAlltoallV.init(
+            pattern, topo, strategy, value_bytes=value_bytes, params=params
+        )
+        self.init_seconds_spent += coll.init_seconds
+        self._colls[key] = coll
+        return coll
+
+    def executor(
+        self,
+        pattern: CommPattern,
+        topo: Topology,
+        mesh,
+        axis_name: str,
+        strategy: str = "auto",
+        value_bytes: int = 8,
+        params: MachineParams = TPU_V5E,
+    ) -> Callable:
+        """Cached bound executor (plan + ``device_put`` index arrays)."""
+        ckey = plan_cache_key(pattern, topo, strategy, value_bytes, params)
+        # silent lookup: binding an executor for an already-initialized
+        # collective is not a plan-cache hit (it never risked re-planning)
+        coll = self._colls.get(ckey)
+        if coll is None:
+            coll = self.collective(pattern, topo, strategy, value_bytes, params)
+        key = (ckey, mesh, axis_name)
+        fn = self._execs.get(key)
+        if fn is not None:
+            self.exec_hits += 1
+            return fn
+        self.exec_misses += 1
+        fn = coll.bind(mesh, axis_name)
+        self._execs[key] = fn
+        return fn
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "exec_hits": self.exec_hits,
+            "exec_misses": self.exec_misses,
+            "init_seconds_spent": self.init_seconds_spent,
+            "init_seconds_saved": self.init_seconds_saved,
+        }
+
+    def clear(self) -> None:
+        self._colls.clear()
+        self._execs.clear()
+
+
+_DEFAULT_CACHE: Optional[PlanCache] = None
+
+
+def default_plan_cache() -> PlanCache:
+    """Process-wide cache shared by AMG setup, benchmarks and examples."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = PlanCache()
+    return _DEFAULT_CACHE

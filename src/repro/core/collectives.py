@@ -179,7 +179,7 @@ def make_executor(
             idx_arrays.append(rnd.scatter)
 
     spec = P(axis_name)
-    from jax.experimental.shard_map import shard_map
+    from ..compat import shard_map
 
     fn = shard_map(
         per_device,
@@ -197,6 +197,48 @@ def make_executor(
         return fn(x, *idx_device)
 
     return exec_fn
+
+
+def time_executor(
+    exchange: Callable,
+    n_procs: int,
+    n_pad: int,
+    dtype=np.float64,
+    iters: int = 20,
+    warmup: int = 3,
+    seed: int = 0,
+) -> float:
+    """Measured wall seconds per exchange of a bound executor.
+
+    The one timing protocol shared by ``benchmarks.amg_comm`` and
+    ``amg.distributed`` (jit + compile call + warmup + timed loop), so the
+    two measured paths cannot drift.  ``dtype`` defaults to float64 to match
+    the plans' ``value_bytes=8`` modeling assumption.
+    """
+    import time
+
+    import jax
+
+    fn = jax.jit(exchange)
+    x = jnp.asarray(
+        np.random.default_rng(seed)
+        .normal(size=(n_procs, max(n_pad, 1), 1))
+        .astype(dtype)
+    )
+    if x.dtype != np.dtype(dtype):
+        # jnp.asarray silently downcasts f64 -> f32 when jax_enable_x64 is
+        # off, which would halve the wire volume being timed vs the claim
+        raise RuntimeError(
+            f"requested {np.dtype(dtype)} but device materialized {x.dtype};"
+            " enable jax_enable_x64 (or pass the narrower dtype explicitly)"
+        )
+    fn(x).block_until_ready()  # compile
+    for _ in range(warmup):
+        fn(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(x).block_until_ready()
+    return (time.perf_counter() - t0) / iters
 
 
 def pack_local_values(

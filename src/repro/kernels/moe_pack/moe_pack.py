@@ -22,7 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ...compat import pallas_tpu_compiler_params
 
 DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_D = 512
@@ -56,7 +58,7 @@ def gather_rows(
         ],
         out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -99,7 +101,7 @@ def combine_rows(
         ],
         out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((T, D), buf.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -20,7 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from ...compat import pallas_tpu_compiler_params
 
 DEFAULT_BLOCK_ROWS = 256
 
@@ -55,7 +57,7 @@ def spmv_ell(
         ],
         out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, 1), vals.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

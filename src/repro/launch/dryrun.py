@@ -54,6 +54,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, moe_mode: str,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from .. import configs
+    from ..compat import cost_analysis_dict
     from ..configs.shapes import SHAPES, skip_reason
     from ..models import Model, serving
     from ..train import TrainerConfig, jit_train_step, make_train_state
@@ -183,7 +184,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, moe_mode: str,
             sj, _ = jit_train_step(m_x, tcfg)
             st = make_train_state(m_x, tcfg, abstract=True)
             comp = sj.lower(st, batch_sds(S, True)).compile()
-            c = comp.cost_analysis()
+            c = cost_analysis_dict(comp)
             txt = comp.as_text()
             cl = collective_bytes_from_hlo(txt)
             dc = (dci_bytes_from_hlo(txt) if mesh_kind == "multi"
@@ -250,7 +251,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, moe_mode: str,
     t_compile = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
     dci = dci_bytes_from_hlo(hlo) if mesh_kind == "multi" else None

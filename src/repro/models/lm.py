@@ -71,10 +71,9 @@ class Model:
         seq_shard: bool = False,
     ):
         self.cfg = cfg
-        from jax.sharding import AxisType
-        self.mesh = mesh if mesh is not None else jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(AxisType.Auto, AxisType.Auto),
+        from ..compat import make_mesh_auto
+        self.mesh = mesh if mesh is not None else make_mesh_auto(
+            (1, 1), ("data", "model")
         )
         self.moe_mode = moe_mode
         self.ep_over_pods = ep_over_pods

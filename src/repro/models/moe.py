@@ -356,7 +356,7 @@ def moe_layer(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """shard_map wrapper: sequence-shard tokens over 'model' lanes, dispatch,
     all_gather the lane outputs back.  Returns (y [B,S,D], aux scalar)."""
-    from jax import shard_map
+    from ..compat import shard_map
 
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     Pm = axes["model"]

@@ -4,9 +4,20 @@ from .partition import (
     block_offsets,
     distributed_spmv_numpy,
     partition_csr,
+    partition_rect_csr,
+)
+from .device import (
+    DeviceEll,
+    distributed_spmv,
+    make_distributed_spmv,
+    pack_vector,
+    partitioned_to_ell,
+    unpack_vector,
 )
 
 __all__ = [
     "CSR", "PartitionedCSR", "block_offsets", "distributed_spmv_numpy",
-    "partition_csr",
+    "partition_csr", "partition_rect_csr",
+    "DeviceEll", "distributed_spmv", "make_distributed_spmv",
+    "pack_vector", "partitioned_to_ell", "unpack_vector",
 ]

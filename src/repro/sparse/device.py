@@ -1,0 +1,196 @@
+"""Device-resident distributed SpMV: padded ELL blocks + plan executor.
+
+This is the device half of the paper's workload: the persistent neighborhood
+collective (``core.collectives``) delivers ghost values and the ``spmv_ell``
+kernel multiplies the per-device local and ghost blocks.  Everything is
+static-shape SPMD: each process's blocks are padded to uniform sizes so one
+``shard_map`` program serves all devices.
+
+Layouts (all leading dim ``P`` = processes, sharded over the mesh axis):
+
+* vectors: ``[P, pad]`` as produced by :func:`pack_vector` /
+  ``core.collectives.pack_local_values`` — zero-padded per block;
+* ELL blocks: ``cols``/``vals`` ``[P, row_pad, K]`` with padding entries
+  pointing at a sentinel slot (index ``in_pad`` resp. ``ghost_pad``) that the
+  per-device program materializes as an appended zero.
+
+Entry points:
+
+* :func:`partitioned_to_ell` — ``PartitionedCSR -> DeviceEll`` conversion;
+* :func:`make_distributed_spmv` — build ``fn(x [P, in_pad]) -> y [P, row_pad]``
+  composing exchange + local/ghost ELL matvecs (jit it, or fuse into a larger
+  jitted program — that is how exchange/compute overlap materializes);
+* :func:`distributed_spmv` — one-shot convenience on a numpy vector.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from .csr import CSR
+from .partition import PartitionedCSR
+
+
+@dataclass
+class DeviceEll:
+    """Stacked per-process padded-ELL blocks of a partitioned operator."""
+
+    n_procs: int
+    row_pad: int     # uniform padded rows per process (== output vector pad)
+    in_pad: int      # uniform padded input-vector block size
+    ghost_pad: int   # uniform padded ghost count (0 => no exchange needed)
+    local_cols: np.ndarray   # [P, row_pad, Kl] int32; pad -> in_pad sentinel
+    local_vals: np.ndarray   # [P, row_pad, Kl]
+    ghost_cols: np.ndarray   # [P, row_pad, Kg] int32; pad -> ghost_pad
+    ghost_vals: np.ndarray   # [P, row_pad, Kg]
+
+
+def _ell_block(
+    m: CSR, row_pad: int, K: int, pad_col: int, dtype
+) -> tuple:
+    cols = np.full((row_pad, K), pad_col, dtype=np.int32)
+    vals = np.zeros((row_pad, K), dtype=dtype)
+    if m.nnz:
+        rows = m.row_indices()
+        pos = np.arange(m.nnz, dtype=np.int64) - m.indptr[rows]
+        cols[rows, pos] = m.indices
+        vals[rows, pos] = m.data
+    return cols, vals
+
+
+def partitioned_to_ell(part: PartitionedCSR, dtype=np.float64) -> DeviceEll:
+    """Convert each process's local/ghost CSR blocks to uniformly padded ELL.
+
+    Row padding matches the owning vector layout (max block size), so the
+    output of the matvec IS the next op's input vector — no repacking
+    between levels of a solve.
+    """
+    P_ = part.n_procs
+    row_pad = int(np.diff(part.offsets).max())
+    in_pad = int(np.diff(part.col_offsets).max())
+    ghost_pad = int(max((len(n) for n in part.needs), default=0))
+    Kl = max(
+        max((int(np.diff(m.indptr).max()) for m in part.local if m.nnz),
+            default=0), 1,
+    )
+    Kg = max(
+        max((int(np.diff(m.indptr).max()) for m in part.ghost if m.nnz),
+            default=0), 1,
+    )
+    lc = np.empty((P_, row_pad, Kl), dtype=np.int32)
+    lv = np.empty((P_, row_pad, Kl), dtype=dtype)
+    gc = np.empty((P_, row_pad, Kg), dtype=np.int32)
+    gv = np.empty((P_, row_pad, Kg), dtype=dtype)
+    for p in range(P_):
+        lc[p], lv[p] = _ell_block(part.local[p], row_pad, Kl, in_pad, dtype)
+        gc[p], gv[p] = _ell_block(part.ghost[p], row_pad, Kg, ghost_pad, dtype)
+    return DeviceEll(P_, row_pad, in_pad, ghost_pad, lc, lv, gc, gv)
+
+
+def pack_vector(offsets: np.ndarray, pad: int, x: np.ndarray) -> np.ndarray:
+    """Global vector -> [P, pad] block layout (zero padding)."""
+    P_ = len(offsets) - 1
+    out = np.zeros((P_, pad), dtype=x.dtype)
+    for p in range(P_):
+        lo, hi = int(offsets[p]), int(offsets[p + 1])
+        out[p, : hi - lo] = x[lo:hi]
+    return out
+
+
+def unpack_vector(offsets: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """[P, pad] block layout -> global vector."""
+    P_ = len(offsets) - 1
+    return np.concatenate(
+        [
+            np.asarray(y[p, : int(offsets[p + 1]) - int(offsets[p])])
+            for p in range(P_)
+        ]
+    )
+
+
+def make_distributed_spmv(
+    ell: DeviceEll,
+    mesh,
+    axis_name: str,
+    exchange: Optional[Callable] = None,
+) -> Callable:
+    """Build the device distributed SpMV ``fn(x [P, in_pad]) -> [P, row_pad]``.
+
+    ``exchange`` is a bound plan executor (``NeighborAlltoallV.bind`` /
+    ``PlanCache.executor``) mapping ``[P, in_pad, 1] -> [P, ghost_pad, 1]``;
+    required unless ``ell.ghost_pad == 0`` (fully local operator).  The local
+    and ghost matvecs go through ``kernels.spmv_ell.ops.spmv`` and therefore
+    dispatch to the Pallas kernel on TPU and the jnp reference on CPU.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..compat import shard_map
+    from ..kernels.spmv_ell.ops import spmv
+
+    if ell.ghost_pad and exchange is None:
+        raise ValueError("operator has ghost columns: exchange required")
+
+    spec = P(axis_name)
+    consts = [
+        jax.device_put(a, NamedSharding(mesh, spec))
+        for a in (ell.local_cols, ell.local_vals,
+                  ell.ghost_cols, ell.ghost_vals)
+    ]
+    has_ghost = ell.ghost_pad > 0
+
+    def per_device(x_blk, gh_blk, lc, lv, gc, gv):
+        # blocks arrive with a leading device dim of 1
+        x = jnp.concatenate(
+            [x_blk[0], jnp.zeros((1,), x_blk.dtype)]
+        )  # sentinel slot at index in_pad
+        y = spmv(lc[0], lv[0], x)
+        if has_ghost:
+            gh = jnp.concatenate(
+                [gh_blk[0], jnp.zeros((1,), gh_blk.dtype)]
+            )
+            y = y + spmv(gc[0], gv[0], gh)
+        return y[None]
+
+    mm = shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(spec,) * 6,
+        out_specs=spec,
+        check_rep=False,
+    )
+
+    def spmv_fn(x):
+        if has_ghost:
+            gh = exchange(x[..., None])[..., 0]
+        else:
+            gh = jnp.zeros((ell.n_procs, 0), x.dtype)
+        return mm(x, gh, *consts)
+
+    return spmv_fn
+
+
+def distributed_spmv(
+    part: PartitionedCSR,
+    coll,
+    mesh,
+    axis_name: str,
+    x: np.ndarray,
+    dtype=np.float64,
+) -> np.ndarray:
+    """One-shot device distributed SpMV of a numpy vector (convenience).
+
+    For repeated products build the function once with
+    :func:`make_distributed_spmv` and jit it.
+    """
+    import jax
+
+    ell = partitioned_to_ell(part, dtype)
+    exchange = coll.bind(mesh, axis_name) if ell.ghost_pad else None
+    fn = jax.jit(make_distributed_spmv(ell, mesh, axis_name, exchange))
+    xg = pack_vector(part.col_offsets, ell.in_pad, x.astype(dtype))
+    y = fn(xg)
+    return unpack_vector(part.offsets, np.asarray(y))

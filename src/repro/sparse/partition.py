@@ -5,6 +5,12 @@ collective: in a distributed SpMV y = A x with block row partition, process
 ``p`` owns rows/vector entries [off[p], off[p+1]) and must *receive* x-values
 for every nonzero column outside its block — exactly a CommPattern over
 globally-indexed values (column index = global value index).
+
+Square operators (:func:`partition_csr`) and rectangular ones
+(:func:`partition_rect_csr` — AMG restriction/prolongation, whose row and
+column ownerships differ) share the same machinery; the pattern is always
+over the *input* (column) vector.  The device-resident ELL form and the
+device SpMV live in :mod:`repro.sparse.device`.
 """
 from __future__ import annotations
 
@@ -27,11 +33,14 @@ def block_offsets(n: int, n_procs: int) -> np.ndarray:
 
 @dataclass
 class PartitionedCSR:
-    """A row-partitioned CSR: per-process local blocks split into on-process
-    (columns within the block) and off-process (ghost) parts, Hypre-style."""
+    """A partitioned CSR: per-process row blocks split into on-process
+    (columns within the owned column block) and off-process (ghost) parts,
+    Hypre-style.  ``offsets`` is row ownership; ``col_offsets`` is input
+    vector ownership (identical for square SpMV operators)."""
 
     n_procs: int
-    offsets: np.ndarray            # [P+1] row/col ownership
+    offsets: np.ndarray            # [P+1] row ownership
+    col_offsets: np.ndarray        # [P+1] column / input-vector ownership
     local: List[CSR]               # per-proc on-process block (local cols)
     ghost: List[CSR]               # per-proc off-process block (ghost cols)
     needs: List[np.ndarray]        # per-proc sorted unique off-proc columns
@@ -39,38 +48,59 @@ class PartitionedCSR:
 
     @property
     def shape(self):
-        n = int(self.offsets[-1])
-        return (n, n)
+        return (int(self.offsets[-1]), int(self.col_offsets[-1]))
 
 
-def partition_csr(A: CSR, n_procs: int) -> PartitionedCSR:
-    assert A.nrows == A.ncols, "square matrices only (SpMV exchange)"
-    off = block_offsets(A.nrows, n_procs)
+def partition_rect_csr(
+    A: CSR, row_offsets: np.ndarray, col_offsets: np.ndarray
+) -> PartitionedCSR:
+    """Partition a (possibly rectangular) CSR operator.
+
+    Process ``p`` owns output rows [row_offsets[p], row_offsets[p+1]) and
+    input vector entries [col_offsets[p], col_offsets[p+1]).  The returned
+    pattern describes the halo exchange of input values.
+    """
+    row_offsets = np.asarray(row_offsets, dtype=np.int64)
+    col_offsets = np.asarray(col_offsets, dtype=np.int64)
+    n_procs = len(row_offsets) - 1
+    assert len(col_offsets) == n_procs + 1
+    assert int(row_offsets[-1]) == A.nrows, (row_offsets[-1], A.nrows)
+    assert int(col_offsets[-1]) == A.ncols, (col_offsets[-1], A.ncols)
     local, ghost, needs = [], [], []
     for p in range(n_procs):
-        lo, hi = int(off[p]), int(off[p + 1])
-        sl = slice(int(A.indptr[lo]), int(A.indptr[hi]))
+        rlo, rhi = int(row_offsets[p]), int(row_offsets[p + 1])
+        clo, chi = int(col_offsets[p]), int(col_offsets[p + 1])
+        sl = slice(int(A.indptr[rlo]), int(A.indptr[rhi]))
         cols = A.indices[sl].astype(np.int64)
         vals = A.data[sl]
         rows = (
-            np.repeat(np.arange(hi - lo, dtype=np.int64),
-                      np.diff(A.indptr[lo:hi + 1]))
+            np.repeat(np.arange(rhi - rlo, dtype=np.int64),
+                      np.diff(A.indptr[rlo:rhi + 1]))
         )
-        on = (cols >= lo) & (cols < hi)
-        loc = CSR.from_coo(rows[on], cols[on] - lo, vals[on],
-                           (hi - lo, hi - lo))
+        on = (cols >= clo) & (cols < chi)
+        loc = CSR.from_coo(rows[on], cols[on] - clo, vals[on],
+                           (rhi - rlo, chi - clo))
         ghost_cols_global = cols[~on]
         uniq = np.unique(ghost_cols_global)
         gmap = {int(g): k for k, g in enumerate(uniq)}
         gcols = np.array(
             [gmap[int(c)] for c in ghost_cols_global], dtype=np.int64
         )
-        gh = CSR.from_coo(rows[~on], gcols, vals[~on], (hi - lo, len(uniq)))
+        gh = CSR.from_coo(rows[~on], gcols, vals[~on], (rhi - rlo, len(uniq)))
         local.append(loc)
         ghost.append(gh)
         needs.append(uniq)
-    pattern = CommPattern.from_block_partition(needs, off)
-    return PartitionedCSR(n_procs, off, local, ghost, needs, pattern)
+    pattern = CommPattern.from_block_partition(needs, col_offsets)
+    return PartitionedCSR(
+        n_procs, row_offsets, col_offsets, local, ghost, needs, pattern
+    )
+
+
+def partition_csr(A: CSR, n_procs: int) -> PartitionedCSR:
+    """Square-operator partition: rows and input entries share one blocking."""
+    assert A.nrows == A.ncols, "use partition_rect_csr for rectangular ops"
+    off = block_offsets(A.nrows, n_procs)
+    return partition_rect_csr(A, off, off)
 
 
 def distributed_spmv_numpy(
@@ -78,7 +108,7 @@ def distributed_spmv_numpy(
 ) -> np.ndarray:
     """Host-oracle distributed SpMV using a CommPlan for the halo exchange."""
     xs = [
-        x[int(part.offsets[p]): int(part.offsets[p + 1])]
+        x[int(part.col_offsets[p]): int(part.col_offsets[p + 1])]
         for p in range(part.n_procs)
     ]
     ghosts = plan.execute_numpy(xs)

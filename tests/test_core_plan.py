@@ -4,9 +4,11 @@ import pytest
 
 from repro.core import (
     CommPattern,
+    Message,
     Topology,
     build_plan,
     color_rounds,
+    padded_wire_volume,
     plan_full,
     plan_partial,
     plan_standard,
@@ -119,3 +121,100 @@ def test_multi_feature_values():
         got = build_plan(pattern, topo, strategy).execute_numpy(vals)
         for g, w in zip(got, want):
             np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# round scheduling edge cases (device executor contract)
+# ---------------------------------------------------------------------------
+
+
+def test_color_rounds_empty_pattern():
+    """An empty pattern yields plans with no wire rounds at every strategy."""
+    n_procs = 8
+    offsets = np.arange(n_procs + 1) * 4
+    needs = [np.array([], dtype=np.int64)] * n_procs
+    pattern = CommPattern.from_block_partition(needs, offsets)
+    topo = Topology(n_procs, 4)
+    for strategy in ("standard", "partial", "full"):
+        plan = build_plan(pattern, topo, strategy)
+        for step in plan.steps:
+            assert color_rounds(step.messages) == []
+        assert all(v == 0 for v in padded_wire_volume(plan).values())
+        got = plan.execute_numpy([np.ones(4) for _ in range(n_procs)])
+        assert all(len(g) == 0 for g in got)
+
+
+def test_color_rounds_local_copy_only():
+    """needs fully inside the owner block: local copies only, zero rounds."""
+    n_procs, n_per = 4, 8
+    offsets = np.arange(n_procs + 1) * n_per
+    # every proc needs two of its OWN values -> src == dst messages only
+    needs = [offsets[p] + np.array([1, 3]) for p in range(n_procs)]
+    pattern = CommPattern.from_block_partition(needs, offsets)
+    topo = Topology(n_procs, 2)
+    for strategy in ("standard", "partial", "full"):
+        plan = build_plan(pattern, topo, strategy)
+        assert plan.stats.totals()["inter_msgs"] == 0
+        assert plan.stats.totals()["intra_msgs"] == 0
+        for step in plan.steps:
+            assert color_rounds(step.messages) == []
+        vals = [np.arange(n_per, dtype=np.float64) + 10 * p
+                for p in range(n_procs)]
+        got = plan.execute_numpy(vals)
+        for p in range(n_procs):
+            np.testing.assert_array_equal(got[p], vals[p][[1, 3]])
+
+
+def test_color_rounds_width_homogeneity():
+    """Largest-first coloring groups same-sized messages into one round."""
+    big = np.arange(64)
+    small = np.arange(2)
+    # two conflicting big messages (same src) and two conflicting small ones
+    msgs = [
+        Message(0, 1, big, big),
+        Message(0, 2, big, big),
+        Message(3, 1, small, small),
+        Message(3, 2, small, small),
+    ]
+    rounds = color_rounds(msgs)
+    assert len(rounds) == 2
+    # each round pairs one big with one small -> but big are colored first:
+    # round widths are set by the big messages, never by interleaving order
+    assert [r.width for r in rounds] == [64, 64]
+    # all four messages scheduled exactly once
+    assert sum(len(r.pairs) for r in rounds) == 4
+    # non-conflicting same-size messages share a round
+    msgs2 = [Message(0, 1, big, big), Message(2, 3, big, big)]
+    assert len(color_rounds(msgs2)) == 1
+
+
+def test_padded_wire_volume_vs_exact_stats():
+    """Padded volume >= exact wire values; equal when sizes are uniform."""
+    rng = np.random.default_rng(13)
+    pattern = random_pattern(rng, n_procs=12, n_per=16, ghosts_per=12)
+    topo = Topology(12, 4)
+    for strategy in ("standard", "partial", "full"):
+        plan = build_plan(pattern, topo, strategy)
+        padded = padded_wire_volume(plan)
+        for step, stats in zip(plan.steps, plan.stats.steps):
+            exact = int(stats.intra_vals.sum() + stats.inter_vals.sum())
+            assert padded[step.name] >= exact
+            widths = {m.size for m in step.messages
+                      if m.src != m.dst and m.size > 0}
+            if len(widths) <= 1:  # uniform sizes pad nothing
+                assert padded[step.name] == exact
+
+
+def test_round_widths_cover_largest_message_first():
+    """Round 0 always carries the globally largest wire message."""
+    rng = np.random.default_rng(17)
+    pattern = random_pattern(rng, n_procs=8, n_per=32, ghosts_per=20)
+    topo = Topology(8, 4)
+    for strategy in ("standard", "partial", "full"):
+        plan = build_plan(pattern, topo, strategy)
+        for step in plan.steps:
+            wire = [m.size for m in step.messages
+                    if m.src != m.dst and m.size > 0]
+            rounds = color_rounds(step.messages)
+            if wire:
+                assert rounds[0].width == max(wire)

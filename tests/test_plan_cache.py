@@ -1,0 +1,94 @@
+"""Plan/executor cache: hits skip re-planning, keys are content-based."""
+import numpy as np
+import pytest
+
+import repro.core.cache as cache_mod
+from repro.core import (
+    CommPattern,
+    PlanCache,
+    Topology,
+    default_plan_cache,
+    pattern_fingerprint,
+    plan_cache_key,
+)
+from repro.core.costmodel import LASSEN, TPU_V5E
+
+
+def make_pattern(seed=0, n_procs=8, n_per=16):
+    rng = np.random.default_rng(seed)
+    offsets = np.arange(n_procs + 1) * n_per
+    needs = [
+        np.sort(rng.choice(n_procs * n_per, size=6, replace=False))
+        for _ in range(n_procs)
+    ]
+    return CommPattern.from_block_partition(needs, offsets)
+
+
+def test_fingerprint_content_based():
+    a = make_pattern(seed=3)
+    b = make_pattern(seed=3)   # distinct objects, equal content
+    c = make_pattern(seed=4)
+    assert a is not b
+    assert pattern_fingerprint(a) == pattern_fingerprint(b)
+    assert pattern_fingerprint(a) != pattern_fingerprint(c)
+
+
+def test_cache_hit_skips_replanning(monkeypatch):
+    topo = Topology(8, 4)
+    cache = PlanCache()
+    calls = {"n": 0}
+    real_init = cache_mod.NeighborAlltoallV.init
+
+    def counting_init(*args, **kwargs):
+        calls["n"] += 1
+        return real_init(*args, **kwargs)
+
+    monkeypatch.setattr(cache_mod.NeighborAlltoallV, "init", counting_init)
+
+    coll1 = cache.collective(make_pattern(seed=1), topo, "auto")
+    assert (cache.misses, cache.hits, calls["n"]) == (1, 0, 1)
+
+    # equal-content pattern, distinct object: hit, NO re-planning
+    coll2 = cache.collective(make_pattern(seed=1), topo, "auto")
+    assert coll2 is coll1
+    assert (cache.misses, cache.hits, calls["n"]) == (1, 1, 1)
+    assert cache.init_seconds_saved > 0.0  # amortized init
+
+    # different strategy or params -> different entry
+    cache.collective(make_pattern(seed=1), topo, "standard")
+    assert calls["n"] == 2
+    cache.collective(make_pattern(seed=1), topo, "auto", params=LASSEN)
+    assert calls["n"] == 3
+    # different pattern content -> different entry
+    cache.collective(make_pattern(seed=2), topo, "auto")
+    assert calls["n"] == 4
+
+
+def test_cache_key_includes_topology_and_width():
+    pat = make_pattern(seed=5)
+    k1 = plan_cache_key(pat, Topology(8, 4), "auto", 8, TPU_V5E)
+    k2 = plan_cache_key(pat, Topology(8, 2), "auto", 8, TPU_V5E)
+    k3 = plan_cache_key(pat, Topology(8, 4), "auto", 4, TPU_V5E)
+    assert len({k1, k2, k3}) == 3
+
+
+def test_executor_cache_reuses_bound_fn():
+    import jax
+
+    cache = PlanCache()
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("proc",))
+    # pattern sized to the real device count so the executor is bindable
+    rng = np.random.default_rng(0)
+    offsets = np.arange(n_dev + 1) * 4
+    needs = [np.arange(min(2, n_dev * 4)) for _ in range(n_dev)]
+    pat = CommPattern.from_block_partition(needs, offsets)
+    topo = Topology(n_dev, 1)
+    f1 = cache.executor(pat, topo, mesh, "proc", "standard")
+    f2 = cache.executor(pat, topo, mesh, "proc", "standard")
+    assert f1 is f2
+    assert (cache.exec_misses, cache.exec_hits) == (1, 1)
+
+
+def test_default_cache_is_process_wide():
+    assert default_plan_cache() is default_plan_cache()
