@@ -120,6 +120,118 @@ def level_selection(
     return out
 
 
+@functools.lru_cache(maxsize=8)
+def setup_records(rows: int, n_procs: int, procs_per_region: int | None = None):
+    """Distributed-setup run on the paper problem: exchange records + topo.
+
+    Runs ``amg.distributed_setup.distributed_build_hierarchy`` once (through
+    the process-wide plan cache) and returns its per-exchange accounting —
+    the setup-phase analogue of :func:`level_patterns`.
+    """
+    from repro.amg import distributed_build_hierarchy, partition_fine_matrix
+
+    ny, nx = _grid(rows)
+    A = diffusion_2d(ny, nx)
+    blocks, off = partition_fine_matrix(A, n_procs)
+    topo = bench_topology(n_procs, procs_per_region)
+    ds = distributed_build_hierarchy(
+        blocks, off, topo, cache=default_plan_cache(),
+        strategy="standard", value_bytes=VALUE_BYTES,
+    )
+    return ds, topo
+
+
+def setup_exchange_rows(rows: int, n_procs: int, params=LASSEN):
+    """Setup-phase SpGEMM exchange comparison: standard vs aggregated.
+
+    For every Galerkin gather of the distributed setup (remote ``A`` rows,
+    then remote ``P`` rows, per level) the payload pattern is planned both
+    ways; message counts/bytes are exact plan quantities, times are modeled
+    (max-rate, ``params``).  A trailing ``total/<phase>`` row aggregates the
+    sparse-dynamic-exchange discovery cost (allreduce ints) per phase.
+    """
+    ds, topo = setup_records(rows, n_procs, None)
+    out = []
+    for rec in ds.records:
+        if rec.phase not in ("gather_A", "gather_P") or rec.pattern is None:
+            continue
+        if rec.pattern.total_ghosts() == 0:
+            continue
+        for strat in ("standard", "full"):
+            plan = build_plan(
+                rec.pattern, topo, strat, value_bytes=VALUE_BYTES
+            )
+            t = plan_time(plan, params)
+            tt = plan.stats.totals()
+            out.append((
+                f"setup_exchange/L{rec.level}/{rec.phase}/{strat}",
+                t * 1e6,
+                f"kind=modeled-lassen|values={rec.values}"
+                f"|inter_msgs={tt['inter_msgs']}"
+                f"|inter_bytes={tt['inter_bytes']}",
+            ))
+    for phase, d in sorted(ds.exchange_summary().items()):
+        out.append((
+            f"setup_exchange/total/{phase}",
+            0.0,
+            f"kind=exact-plan|values={d['values']}"
+            f"|exchanges={d['exchanges']}"
+            f"|allreduce_ints={d['allreduce_ints']}",
+        ))
+    return out
+
+
+def measured_setup_exchange(
+    rows: int,
+    n_procs: int | None = None,
+    procs_per_region: int | None = None,
+    strategy: str = "auto",
+    params=LASSEN,
+    iters: int = 10,
+    warmup: int = 2,
+) -> List[Tuple[str, str, float]]:
+    """MEASURED device execution of the setup-phase gather exchanges.
+
+    Binds the jitted executor of every Galerkin payload pattern on the
+    local mesh (same protocol as :func:`measured_device_exchange`) and
+    times it; returns [(label, strategy, seconds)].
+    """
+    import jax
+
+    from repro.core import time_executor
+
+    n_procs = n_procs or jax.device_count()
+    if jax.device_count() < n_procs:
+        raise RuntimeError(
+            f"need {n_procs} devices, have {jax.device_count()} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count (see test.sh)"
+        )
+    mesh = jax.make_mesh((n_procs,), ("proc",))
+    ds, topo = setup_records(rows, n_procs, procs_per_region)
+    cache = default_plan_cache()
+    out = []
+    for rec in ds.records:
+        if rec.phase not in ("gather_A", "gather_P") or rec.pattern is None:
+            continue
+        if rec.pattern.total_ghosts() == 0:
+            continue
+        coll = cache.collective(
+            rec.pattern, topo, strategy, value_bytes=VALUE_BYTES, params=params
+        )
+        exchange = cache.executor(
+            rec.pattern, topo, mesh, "proc", strategy,
+            value_bytes=VALUE_BYTES, params=params,
+        )
+        secs = time_executor(
+            exchange, n_procs, int(rec.pattern.n_local.max()),
+            dtype=np.float64, iters=iters, warmup=warmup,
+        )
+        out.append(
+            (f"L{rec.level}/{rec.phase}", coll.strategy, secs)
+        )
+    return out
+
+
 def measured_device_exchange(
     rows: int,
     n_procs: int | None = None,

@@ -1,18 +1,30 @@
 """Benchmark harness: one function per paper table/figure + roofline report.
 
-Prints ``name,us_per_call,derived`` CSV.  Network times are *modeled*
-(locality-aware max-rate, Lassen parameters) — message counts and bytes are
-exact plan quantities; rows are tagged with kind=measured-host /
-modeled-lassen / exact-plan / dryrun-roofline accordingly.
+Prints ``name,us_per_call,derived`` CSV (and optionally writes the same rows
+as JSON).  Network times are *modeled* (locality-aware max-rate, Lassen
+parameters) — message counts and bytes are exact plan quantities; rows are
+tagged with kind=measured-host / measured-device / modeled-lassen /
+exact-plan / dryrun-roofline accordingly.
 
-    PYTHONPATH=src python -m benchmarks.run            # full paper problem
-    REPRO_BENCH_ROWS=65536 ... python -m benchmarks.run  # smaller/faster
+    PYTHONPATH=src python -m benchmarks.run                 # full paper problem
+    PYTHONPATH=src python -m benchmarks.run --rows 65536    # smaller/faster
+    PYTHONPATH=src python -m benchmarks.run --smoke         # CI smoke: tiny
+        # problem, every section must succeed (exceptions are fatal), rows
+        # written to benchmarks/results/smoke.json for artifact upload
+
+``REPRO_BENCH_ROWS`` is honored when ``--rows`` is not given.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import pathlib
 import sys
 import time
+
+SMOKE_ROWS = 4096
+SMOKE_PROCS = 64          # modeled process count for the smoke problem
 
 
 def measured_exchange_rows(rows: int):
@@ -52,12 +64,57 @@ def measured_exchange_rows(rows: int):
     return out
 
 
-def main() -> None:
-    rows = int(os.environ.get("REPRO_BENCH_ROWS", 524_288))
-    t_start = time.time()
+def setup_exchange_modeled(rows: int, n_procs: int):
+    """Setup-phase SpGEMM gathers, standard vs aggregated (modeled)."""
+    from .amg_comm import setup_exchange_rows
+
+    return setup_exchange_rows(min(rows, 65_536), n_procs)
+
+
+def measured_setup_exchange_rows(rows: int):
+    """MEASURED setup-phase gather exchanges on the local mesh."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from .amg_comm import measured_setup_exchange
+
+    out = []
+    for label, strategy, secs in measured_setup_exchange(min(rows, 65_536)):
+        out.append(
+            (f"measured_setup_exchange/{label}", secs * 1e6,
+             f"kind=measured-device|strategy={strategy}|")
+        )
+    return out
+
+
+def build_sections(rows: int, smoke: bool):
     from . import paper_figs, roofline_report
 
-    sections = [
+    if smoke:
+        # tiny problem, reduced modeled process count / rows-per-proc:
+        # every section of the full harness is exercised, nothing takes
+        # longer than seconds
+        return [
+            ("fig6", lambda: paper_figs.fig6_graph_creation(rows)),
+            ("fig12", lambda: paper_figs.fig12_strong_scaling(rows)),
+            ("fig13", lambda: paper_figs.fig13_weak_scaling(16)),
+            ("fig7", lambda: paper_figs.fig7_crossover(rows, SMOKE_PROCS)),
+            ("fig8_9",
+             lambda: paper_figs.fig8_9_message_counts(rows, SMOKE_PROCS)),
+            ("fig10",
+             lambda: paper_figs.fig10_message_sizes(rows, SMOKE_PROCS)),
+            ("fig11",
+             lambda: paper_figs.fig11_per_level_cost(rows, SMOKE_PROCS)),
+            ("amg", lambda: paper_figs.amg_solver_convergence(rows)),
+            ("setup_exchange",
+             lambda: setup_exchange_modeled(rows, SMOKE_PROCS)),
+            ("measured_exchange", lambda: measured_exchange_rows(rows)),
+            ("measured_setup_exchange",
+             lambda: measured_setup_exchange_rows(rows)),
+            ("roofline", roofline_report.rows),
+        ]
+    return [
         ("fig6", lambda: paper_figs.fig6_graph_creation(rows)),
         ("fig7", lambda: paper_figs.fig7_crossover(rows)),
         ("fig8_9", lambda: paper_figs.fig8_9_message_counts(rows)),
@@ -66,23 +123,76 @@ def main() -> None:
         ("fig12", lambda: paper_figs.fig12_strong_scaling(rows)),
         ("fig13", lambda: paper_figs.fig13_weak_scaling()),
         ("amg", paper_figs.amg_solver_convergence),
+        ("setup_exchange", lambda: setup_exchange_modeled(rows, 256)),
         ("measured_exchange", lambda: measured_exchange_rows(rows)),
+        ("measured_setup_exchange",
+         lambda: measured_setup_exchange_rows(rows)),
         ("roofline", roofline_report.rows),
     ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--rows", type=int,
+        default=int(os.environ.get("REPRO_BENCH_ROWS", 524_288)),
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny problem, strict mode: any section exception is fatal, "
+        "results JSON written (CI gate for the perf paths)",
+    )
+    ap.add_argument(
+        "--out", default=None,
+        help="write results JSON here (default in --smoke mode: "
+        "benchmarks/results/smoke.json)",
+    )
+    args = ap.parse_args(argv)
+    rows = SMOKE_ROWS if args.smoke else args.rows
+    out_path = args.out
+    if out_path is None and args.smoke:
+        out_path = str(
+            pathlib.Path(__file__).parent / "results" / "smoke.json"
+        )
+
+    t_start = time.time()
+    collected = []
+    failures = []
     print("name,us_per_call,derived")
-    for section, fn in sections:
+    for section, fn in build_sections(rows, args.smoke):
         t0 = time.time()
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.2f},{derived}")
-        except Exception as e:  # keep the harness running
+                collected.append(
+                    {"name": name, "us_per_call": us, "derived": derived}
+                )
+        except Exception as e:  # keep the harness running (strict in smoke)
+            if args.smoke:
+                raise
+            failures.append(section)
             print(f"{section}/ERROR,0.00,kind=ERROR|{type(e).__name__}:"
                   f"{str(e)[:120]}")
         sys.stdout.flush()
         print(f"# section {section} took {time.time() - t0:.1f}s",
               file=sys.stderr)
-    print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
+    total = time.time() - t_start
+    print(f"# total {total:.1f}s", file=sys.stderr)
+
+    if out_path:
+        payload = {
+            "rows_param": rows,
+            "smoke": args.smoke,
+            "total_seconds": total,
+            "failed_sections": failures,
+            "results": collected,
+        }
+        p = pathlib.Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(payload, indent=2))
+        print(f"# results JSON: {p}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -30,6 +30,13 @@ def main():
     ap.add_argument("--strategy", default="auto",
                     choices=["auto", "standard", "partial", "full"])
     ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--setup", default="host",
+                    choices=["host", "distributed"],
+                    help="host: lower the host-built hierarchy; distributed: "
+                    "build the hierarchy end-to-end from the partitioned "
+                    "fine matrix (PMIS/interpolation/Galerkin SpGEMM over "
+                    "sparse dynamic data exchanges) — no rank ever holds a "
+                    "global operator")
     ap.add_argument("--no-device", action="store_true",
                     help="skip the device-resident solve")
     args = ap.parse_args()
@@ -38,7 +45,8 @@ def main():
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.amg import DistributedHierarchy, build_hierarchy, diffusion_2d, solve
+    from repro.amg import DistributedHierarchy, build_hierarchy, diffusion_2d, \
+        partition_fine_matrix, solve
     from repro.core import LASSEN, NeighborAlltoallV, Topology, build_plan, \
         default_plan_cache, plan_time
     from repro.sparse import partition_csr
@@ -83,13 +91,24 @@ def main():
     n_dev = jax.device_count()
     mesh = jax.make_mesh((n_dev,), ("proc",))
     print(f"\n[device] {n_dev} device(s); setting up distributed hierarchy "
-          f"(persistent init through the plan cache)...")
+          f"(persistent init through the plan cache, {args.setup} setup)...")
     cache = default_plan_cache()
     t0 = time.time()
-    dh = DistributedHierarchy.setup(
-        h, mesh, strategy=args.strategy, cache=cache
-    )
-    print(f"[device] setup {time.time() - t0:.1f}s")
+    if args.setup == "distributed":
+        # end-to-end distributed setup: each rank owns a row block of A and
+        # coarsens it in place — strength/PMIS/interp with halo'd rounds,
+        # R = P^T and the Galerkin R*A*P over sparse dynamic data exchanges
+        blocks, off = partition_fine_matrix(A, n_dev)
+        dh = DistributedHierarchy.setup_partitioned(
+            blocks, off, mesh, strategy=args.strategy, cache=cache
+        )
+        print(f"[device] setup {time.time() - t0:.1f}s")
+        print(dh.setup_info.describe())
+    else:
+        dh = DistributedHierarchy.setup(
+            h, mesh, strategy=args.strategy, cache=cache
+        )
+        print(f"[device] setup {time.time() - t0:.1f}s")
     print(dh.describe())
     for lvl, op, strat, rep in dh.selection_table():
         if op == "A" and rep:

@@ -81,7 +81,6 @@ def direct_interpolation(A: CSR, S: CSR, splitting: np.ndarray) -> CSR:
     n = A.nrows
     # mark strong edges in A's pattern
     srows, scols = S.row_indices(), S.indices.astype(np.int64)
-    strong = set_like = None
     strong_lookup = CSR.from_coo(srows, scols, np.ones(len(srows)), A.shape)
 
     arows = A.row_indices()

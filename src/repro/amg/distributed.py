@@ -46,6 +46,12 @@ from ..sparse.partition import (
     PartitionedCSR,
     block_offsets,
     partition_rect_csr,
+    partitioned_from_blocks,
+)
+from .distributed_setup import (
+    DistributedSetup,
+    _block_inv_diag,
+    distributed_build_hierarchy,
 )
 from .hierarchy import Hierarchy, inv_diag
 
@@ -112,6 +118,9 @@ class DistributedHierarchy:
         self.strategy = strategy
         self.params = params
         self.value_bytes = value_bytes
+        # populated by setup_partitioned: the distributed-setup record
+        # (per-level blocks + exchange accounting), None for host lowering
+        self.setup_info: Optional[DistributedSetup] = None
         self._build_device_fns()
 
     # ------------------------------------------------------------- setup
@@ -166,6 +175,76 @@ class DistributedHierarchy:
             levels.append(dl)
         return cls(levels, mesh, axis_name, topo, cache, dtype,
                    strategy, params, value_bytes)
+
+    @classmethod
+    def setup_partitioned(
+        cls,
+        A_blocks,
+        row_offsets: np.ndarray,
+        mesh,
+        axis_name: str = "proc",
+        procs_per_region: Optional[int] = None,
+        strategy: str = "auto",
+        params: MachineParams = TPU_V5E,
+        value_bytes: int = 8,
+        cache: Optional[PlanCache] = None,
+        dtype=np.float64,
+        max_levels: int = 25,
+        min_coarse: int = 64,
+        strength_theta: float = 0.25,
+        seed: int = 0,
+    ) -> "DistributedHierarchy":
+        """End-to-end distributed build: partitioned fine matrix -> solve.
+
+        Runs the distributed *setup* (``amg.distributed_setup``: PMIS /
+        interpolation / Galerkin SpGEMM over sparse dynamic data exchanges)
+        and lowers the resulting per-rank blocks straight to the device
+        solve — the global operators are never materialized on one rank.
+        Setup and solve share one :class:`PlanCache`; for structurally
+        symmetric operators the setup halo pattern IS the solve halo
+        pattern, so the solve collectives come out of the cache pre-built.
+        """
+        n_procs = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name])
+        assert n_procs == len(A_blocks), (n_procs, len(A_blocks))
+        topo = Topology(
+            n_procs, procs_per_region or _default_procs_per_region(n_procs)
+        )
+        cache = cache if cache is not None else default_plan_cache()
+        setup = distributed_build_hierarchy(
+            A_blocks, row_offsets, topo, cache=cache,
+            max_levels=max_levels, min_coarse=min_coarse,
+            strength_theta=strength_theta, seed=seed,
+            strategy=strategy, value_bytes=value_bytes, params=params,
+        )
+
+        def make_op(blocks, row_off, col_off) -> DistOp:
+            part = partitioned_from_blocks(blocks, row_off, col_off)
+            coll = cache.collective(
+                part.pattern, topo, strategy, value_bytes, params
+            )
+            return DistOp(part, coll, partitioned_to_ell(part, dtype))
+
+        levels: List[DistributedLevel] = []
+        for k, sl in enumerate(setup.levels):
+            A_op = make_op(sl.A_blocks, sl.row_offsets, sl.row_offsets)
+            pad = int(np.diff(sl.row_offsets).max())
+            dinv = np.zeros((n_procs, pad), dtype=dtype)
+            for p, Ab in enumerate(sl.A_blocks):
+                dinv[p, : Ab.nrows] = _block_inv_diag(
+                    Ab, int(sl.row_offsets[p])
+                ).astype(dtype)
+            dl = DistributedLevel(
+                index=k, n=sl.nrows, pad=pad, A=A_op,
+                dinv=dinv, rho=sl.rho or 1.0,
+            )
+            if sl.P_blocks is not None and k + 1 < len(setup.levels):
+                dl.R = make_op(sl.R_blocks, sl.coarse_offsets, sl.row_offsets)
+                dl.P = make_op(sl.P_blocks, sl.row_offsets, sl.coarse_offsets)
+            levels.append(dl)
+        dh = cls(levels, mesh, axis_name, topo, cache, dtype,
+                 strategy, params, value_bytes)
+        dh.setup_info = setup
+        return dh
 
     # ------------------------------------------------- device programs
     def _bind(self, op: DistOp) -> Callable:

@@ -27,6 +27,9 @@ class Level:
     P: Optional[CSR] = None  # prolongation to this level's fine grid
     R: Optional[CSR] = None  # restriction (P^T)
     rho: float = 0.0         # spectral-radius estimate of D^-1 A (Chebyshev)
+    splitting: Optional[np.ndarray] = None  # C/F splitting used to coarsen
+    # this level (+1 C-point, 0 F-point); the quantity the distributed
+    # setup (amg.distributed_setup) must reproduce exactly
 
 
 def inv_diag(A: CSR) -> np.ndarray:
@@ -100,6 +103,7 @@ def build_hierarchy(
         P, splitting = direct_interpolation(Ak, S, splitting)
         if P.ncols >= Ak.nrows or P.ncols == 0:
             break
+        levels[-1].splitting = splitting
         R = P.transpose()
         AP = Ak.matmat(P)
         Ac = R.matmat(AP).prune(1e-14)

@@ -31,6 +31,7 @@ from .collectives import (
     unpack_ghosts,
 )
 from .neighborhood import NeighborAlltoallV
+from .dynexchange import DiscoveryStats, SparseDynamicExchange
 from .cache import (
     PlanCache,
     default_plan_cache,
@@ -40,6 +41,7 @@ from .cache import (
 
 __all__ = [
     "PlanCache", "default_plan_cache", "pattern_fingerprint", "plan_cache_key",
+    "DiscoveryStats", "SparseDynamicExchange",
     "CommPattern", "CommPlan", "CommStep", "Message", "PlanStats", "StepStats",
     "Topology", "color_rounds", "padded_wire_volume",
     "STRATEGIES", "build_plan", "plan_full", "plan_partial", "plan_standard",

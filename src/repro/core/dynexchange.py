@@ -1,0 +1,158 @@
+"""Sparse dynamic data exchange: partner discovery for irregular patterns.
+
+The SpGEMM communication problem the AMG *setup* phase faces (and that
+"A More Scalable Sparse Dynamic Data Exchange", arXiv 2308.13869, studies):
+a process knows which remote rows it must *fetch* — but the owners of those
+rows do not know who will ask.  Before any ``NeighborAlltoallV`` can be
+initialized, the send side of the pattern has to be discovered.
+
+This module implements the allreduce-on-counts discovery protocol: every
+process contributes a length-``P`` vector of per-destination request counts,
+one allreduce(sum) of the ``P x P`` count matrix tells each process exactly
+which partners will contact it (and with how much), and the requests
+themselves then flow point-to-point between the discovered pairs.  The
+output is a :class:`~repro.core.plan.CommPattern` ready for
+``PlanCache.collective`` — discovery is the dynamic part, the payload
+exchange is a cached persistent collective.
+
+Two primitives cover both directions of irregularity:
+
+* :meth:`SparseDynamicExchange.discover` — *pull*: each rank names the
+  globally-indexed values it needs; owners learn their serving sets.
+  Used by ``sparse.spgemm.gather_remote_rows`` (remote-row fetch for the
+  distributed Galerkin product).
+* :meth:`SparseDynamicExchange.push` — *push*: each rank holds payload rows
+  with known destinations; receivers learn their sources.  Used for the
+  transpose exchanges of the distributed AMG setup (reverse strength edges,
+  ``R = P^T``), and the same shape as MoE token routing (tokens know their
+  expert, experts do not know their senders) — the utility is deliberately
+  payload-agnostic so the MoE dispatch path can reuse it.
+
+Everything here is host-side numpy over simulated ranks, matching the rest
+of the planning stack (``core.plan`` / ``core.locality``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .plan import CommPattern
+
+
+@dataclass
+class DiscoveryStats:
+    """Cost accounting of one allreduce-on-counts discovery.
+
+    ``allreduce_ints`` is the size of the reduced count matrix (``P*P``
+    int64 entries — the protocol's fixed cost); ``request_ints`` the total
+    number of request indices that crossed the wire point-to-point after
+    discovery; the partner arrays give the per-rank neighborhood sizes the
+    discovered pattern will have.
+    """
+
+    n_procs: int
+    allreduce_ints: int
+    request_ints: int
+    request_partners: np.ndarray   # per rank: # owners it requests from
+    serve_partners: np.ndarray     # per rank: # requesters it must serve
+
+    @property
+    def max_request_partners(self) -> int:
+        return int(self.request_partners.max()) if self.n_procs else 0
+
+    @property
+    def max_serve_partners(self) -> int:
+        return int(self.serve_partners.max()) if self.n_procs else 0
+
+
+class SparseDynamicExchange:
+    """Allreduce-on-counts partner discovery (arXiv 2308.13869)."""
+
+    @staticmethod
+    def discover(
+        needs: Sequence[np.ndarray], proc_offsets: np.ndarray
+    ) -> Tuple[CommPattern, DiscoveryStats]:
+        """Pull-side discovery: ``needs[p]`` are the global indices rank
+        ``p`` must fetch; ownership is contiguous by ``proc_offsets``.
+
+        Simulates the protocol faithfully: rank ``p`` forms its count row
+        ``counts[p, q] = |{g in needs[p] : owner(g) = q}|``, the rows are
+        allreduced, and owners read their incoming column.  Returns the
+        resulting :class:`CommPattern` (feed it to ``PlanCache.collective``
+        for the persistent payload exchange) plus discovery-cost stats.
+        """
+        proc_offsets = np.asarray(proc_offsets, dtype=np.int64)
+        n_procs = len(proc_offsets) - 1
+        needs = [np.asarray(n, dtype=np.int64) for n in needs]
+        counts = np.zeros((n_procs, n_procs), dtype=np.int64)
+        for p, need in enumerate(needs):
+            if len(need):
+                owners = np.searchsorted(proc_offsets, need, side="right") - 1
+                np.add.at(counts[p], owners, 1)
+        pattern = CommPattern.from_block_partition(needs, proc_offsets)
+        return pattern, DiscoveryStats(
+            n_procs=n_procs,
+            allreduce_ints=n_procs * n_procs,
+            request_ints=int(counts.sum()),
+            request_partners=(counts > 0).sum(axis=1),
+            serve_partners=(counts > 0).sum(axis=0),
+        )
+
+    @staticmethod
+    def push(
+        dest: Sequence[np.ndarray], payload: Sequence[np.ndarray]
+    ) -> Tuple[List[np.ndarray], List[np.ndarray], DiscoveryStats]:
+        """Push-side exchange: rank ``p`` holds ``payload[p]`` (``[k, ...]``)
+        whose row ``i`` is bound for rank ``dest[p][i]``; receivers do not
+        know their sources until discovery.
+
+        Returns ``(received, sources, stats)``: ``received[q]`` stacks the
+        payload rows delivered to ``q`` (sources in ascending rank order,
+        original order preserved within a source — deterministic, so setup
+        results are reproducible), ``sources[q]`` the matching source-rank
+        array.
+        """
+        n_procs = len(dest)
+        dest = [np.asarray(d, dtype=np.int64) for d in dest]
+        payload = [np.asarray(v) for v in payload]
+        counts = np.zeros((n_procs, n_procs), dtype=np.int64)
+        for p, d in enumerate(dest):
+            if len(d):
+                np.add.at(counts[p], d, 1)
+        trailing = next(
+            (v.shape[1:] for v in payload if v.ndim > 1), ()
+        )
+        dtype = next((v.dtype for v in payload if len(v)), np.float64)
+        # one stable sort per sender groups its rows by destination; the
+        # per-receiver assembly is then pure concatenation (ascending rank,
+        # original order within a rank — same deterministic layout)
+        parts: List[List[np.ndarray]] = [[] for _ in range(n_procs)]
+        srcs: List[List[np.ndarray]] = [[] for _ in range(n_procs)]
+        for p, d in enumerate(dest):
+            if not len(d):
+                continue
+            order = np.argsort(d, kind="stable")
+            sorted_d = d[order]
+            bounds = np.flatnonzero(np.diff(sorted_d)) + 1
+            for chunk in np.split(order, bounds):
+                q = int(d[chunk[0]])
+                parts[q].append(payload[p][chunk])
+                srcs[q].append(np.full(len(chunk), p, dtype=np.int64))
+        received: List[np.ndarray] = []
+        sources: List[np.ndarray] = []
+        for q in range(n_procs):
+            if parts[q]:
+                received.append(np.concatenate(parts[q]))
+                sources.append(np.concatenate(srcs[q]))
+            else:
+                received.append(np.zeros((0,) + trailing, dtype=dtype))
+                sources.append(np.zeros(0, dtype=np.int64))
+        return received, sources, DiscoveryStats(
+            n_procs=n_procs,
+            allreduce_ints=n_procs * n_procs,
+            request_ints=int(counts.sum()),
+            request_partners=(counts > 0).sum(axis=1),
+            serve_partners=(counts > 0).sum(axis=0),
+        )

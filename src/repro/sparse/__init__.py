@@ -5,6 +5,9 @@ from .partition import (
     distributed_spmv_numpy,
     partition_csr,
     partition_rect_csr,
+    partitioned_from_blocks,
+    split_rows,
+    stack_blocks,
 )
 from .device import (
     DeviceEll,
@@ -14,10 +17,21 @@ from .device import (
     partitioned_to_ell,
     unpack_vector,
 )
+from .spgemm import (
+    RapResult,
+    RowGather,
+    gather_remote_rows,
+    merge_row_sets,
+    spgemm_local,
+    spgemm_rap,
+)
 
 __all__ = [
     "CSR", "PartitionedCSR", "block_offsets", "distributed_spmv_numpy",
-    "partition_csr", "partition_rect_csr",
+    "partition_csr", "partition_rect_csr", "partitioned_from_blocks",
+    "split_rows", "stack_blocks",
     "DeviceEll", "distributed_spmv", "make_distributed_spmv",
     "pack_vector", "partitioned_to_ell", "unpack_vector",
+    "RapResult", "RowGather", "gather_remote_rows", "merge_row_sets",
+    "spgemm_local", "spgemm_rap",
 ]

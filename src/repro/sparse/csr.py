@@ -115,6 +115,28 @@ class CSR:
         rows = self.row_indices()[keep]
         return CSR.from_coo(rows, self.indices[keep], self.data[keep], self.shape)
 
+    def take_rows(self, rows: np.ndarray) -> "CSR":
+        """Row-subset CSR: the given rows, in the given order (entries keep
+        their in-row order, so downstream merge sums are reproducible)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        lens = np.diff(self.indptr)[rows]
+        total = int(lens.sum())
+        indptr = np.concatenate(
+            [[0], np.cumsum(lens)]
+        ).astype(np.int64)
+        if total == 0:
+            return CSR((len(rows), self.ncols), indptr,
+                       np.zeros(0, dtype=np.int32), np.zeros(0))
+        starts = self.indptr[rows]
+        seg_off = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        flat = (
+            np.repeat(starts, lens)
+            + np.arange(total, dtype=np.int64)
+            - np.repeat(seg_off, lens)
+        )
+        return CSR((len(rows), self.ncols), indptr,
+                   self.indices[flat], self.data[flat])
+
     def matmat(self, other: "CSR") -> "CSR":
         """CSR x CSR, fully vectorized: expand every (i,j,v) of A against row
         j of B, then merge duplicates via from_coo's lexsort."""

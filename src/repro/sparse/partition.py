@@ -51,6 +51,89 @@ class PartitionedCSR:
         return (int(self.offsets[-1]), int(self.col_offsets[-1]))
 
 
+def split_rows(A: CSR, row_offsets: np.ndarray) -> List[CSR]:
+    """Cut a CSR into contiguous row blocks that keep GLOBAL column indices.
+
+    This is the on-rank storage of a block row distribution (Hypre's
+    ParCSR before the local/ghost split): block ``p`` holds global rows
+    [row_offsets[p], row_offsets[p+1]) as local rows 0..m_p-1.
+    """
+    row_offsets = np.asarray(row_offsets, dtype=np.int64)
+    assert int(row_offsets[-1]) == A.nrows, (row_offsets[-1], A.nrows)
+    blocks = []
+    for p in range(len(row_offsets) - 1):
+        rlo, rhi = int(row_offsets[p]), int(row_offsets[p + 1])
+        sl = slice(int(A.indptr[rlo]), int(A.indptr[rhi]))
+        blocks.append(
+            CSR(
+                (rhi - rlo, A.ncols),
+                A.indptr[rlo:rhi + 1] - A.indptr[rlo],
+                A.indices[sl].copy(),
+                A.data[sl].copy(),
+            )
+        )
+    return blocks
+
+
+def stack_blocks(blocks: List[CSR], ncols: int | None = None) -> CSR:
+    """Vertically stack row blocks (global columns) back into one CSR.
+
+    The inverse of :func:`split_rows`; used to validate distributed setup
+    products against their host counterparts.
+    """
+    ncols = int(blocks[0].ncols if ncols is None else ncols)
+    indptrs = [np.asarray(b.indptr, dtype=np.int64) for b in blocks]
+    offs = np.concatenate([[0], np.cumsum([ip[-1] for ip in indptrs])])
+    indptr = np.concatenate(
+        [[0]] + [ip[1:] + off for ip, off in zip(indptrs, offs)]
+    ).astype(np.int64)
+    return CSR(
+        (int(sum(b.nrows for b in blocks)), ncols),
+        indptr,
+        np.concatenate([b.indices for b in blocks]).astype(np.int32)
+        if indptr[-1] else np.zeros(0, dtype=np.int32),
+        np.concatenate([b.data for b in blocks])
+        if indptr[-1] else np.zeros(0),
+    )
+
+
+def partitioned_from_blocks(
+    blocks: List[CSR], row_offsets: np.ndarray, col_offsets: np.ndarray
+) -> PartitionedCSR:
+    """Build a :class:`PartitionedCSR` from per-rank row blocks directly.
+
+    The block form (global column indices, as produced by distributed setup
+    or :func:`split_rows`) is split into on-process / ghost parts without
+    ever assembling the global operator — the entry point that keeps the
+    distributed AMG setup's products device-bound end to end.
+    """
+    row_offsets = np.asarray(row_offsets, dtype=np.int64)
+    col_offsets = np.asarray(col_offsets, dtype=np.int64)
+    n_procs = len(blocks)
+    assert len(row_offsets) == n_procs + 1
+    assert len(col_offsets) == n_procs + 1
+    local, ghost, needs = [], [], []
+    for p, blk in enumerate(blocks):
+        assert blk.nrows == int(row_offsets[p + 1] - row_offsets[p])
+        clo, chi = int(col_offsets[p]), int(col_offsets[p + 1])
+        rows = blk.row_indices()
+        cols = blk.indices.astype(np.int64)
+        vals = blk.data
+        on = (cols >= clo) & (cols < chi)
+        loc = CSR.from_coo(rows[on], cols[on] - clo, vals[on],
+                           (blk.nrows, chi - clo))
+        uniq = np.unique(cols[~on])
+        gcols = np.searchsorted(uniq, cols[~on])
+        gh = CSR.from_coo(rows[~on], gcols, vals[~on], (blk.nrows, len(uniq)))
+        local.append(loc)
+        ghost.append(gh)
+        needs.append(uniq)
+    pattern = CommPattern.from_block_partition(needs, col_offsets)
+    return PartitionedCSR(
+        n_procs, row_offsets, col_offsets, local, ghost, needs, pattern
+    )
+
+
 def partition_rect_csr(
     A: CSR, row_offsets: np.ndarray, col_offsets: np.ndarray
 ) -> PartitionedCSR:
@@ -64,35 +147,9 @@ def partition_rect_csr(
     col_offsets = np.asarray(col_offsets, dtype=np.int64)
     n_procs = len(row_offsets) - 1
     assert len(col_offsets) == n_procs + 1
-    assert int(row_offsets[-1]) == A.nrows, (row_offsets[-1], A.nrows)
     assert int(col_offsets[-1]) == A.ncols, (col_offsets[-1], A.ncols)
-    local, ghost, needs = [], [], []
-    for p in range(n_procs):
-        rlo, rhi = int(row_offsets[p]), int(row_offsets[p + 1])
-        clo, chi = int(col_offsets[p]), int(col_offsets[p + 1])
-        sl = slice(int(A.indptr[rlo]), int(A.indptr[rhi]))
-        cols = A.indices[sl].astype(np.int64)
-        vals = A.data[sl]
-        rows = (
-            np.repeat(np.arange(rhi - rlo, dtype=np.int64),
-                      np.diff(A.indptr[rlo:rhi + 1]))
-        )
-        on = (cols >= clo) & (cols < chi)
-        loc = CSR.from_coo(rows[on], cols[on] - clo, vals[on],
-                           (rhi - rlo, chi - clo))
-        ghost_cols_global = cols[~on]
-        uniq = np.unique(ghost_cols_global)
-        gmap = {int(g): k for k, g in enumerate(uniq)}
-        gcols = np.array(
-            [gmap[int(c)] for c in ghost_cols_global], dtype=np.int64
-        )
-        gh = CSR.from_coo(rows[~on], gcols, vals[~on], (rhi - rlo, len(uniq)))
-        local.append(loc)
-        ghost.append(gh)
-        needs.append(uniq)
-    pattern = CommPattern.from_block_partition(needs, col_offsets)
-    return PartitionedCSR(
-        n_procs, row_offsets, col_offsets, local, ghost, needs, pattern
+    return partitioned_from_blocks(
+        split_rows(A, row_offsets), row_offsets, col_offsets
     )
 
 

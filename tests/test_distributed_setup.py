@@ -1,0 +1,262 @@
+"""Distributed AMG setup: partner discovery, remote-row gather, block
+SpGEMM, and the full hierarchy build validated against the host setup.
+
+Host-process tests run the rank-simulated machinery directly (no devices
+needed); the device lowering of the distributed setup runs in a subprocess
+on 8 virtual devices (check_distributed_setup.py), mirroring
+test_distributed_amg.py.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.amg import (
+    build_hierarchy,
+    diffusion_2d,
+    distributed_build_hierarchy,
+    partition_fine_matrix,
+)
+from repro.core import PlanCache, SparseDynamicExchange, Topology
+from repro.sparse import (
+    CSR,
+    block_offsets,
+    gather_remote_rows,
+    merge_row_sets,
+    spgemm_local,
+    spgemm_rap,
+    split_rows,
+    stack_blocks,
+)
+
+PROGS = pathlib.Path(__file__).parent / "multidevice_progs"
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def random_csr(rng, m, n, density=0.08) -> CSR:
+    nnz = max(1, int(m * n * density))
+    rows = rng.integers(0, m, size=nnz)
+    cols = rng.integers(0, n, size=nnz)
+    vals = rng.normal(size=nnz)
+    return CSR.from_coo(rows, cols, vals, (m, n))
+
+
+# ---------------------------------------------------------------------------
+# sparse dynamic data exchange
+# ---------------------------------------------------------------------------
+
+
+def test_discover_partners_counts_and_pattern():
+    off = np.array([0, 3, 6, 10])
+    needs = [np.array([4, 8]), np.array([0, 1, 9]), np.zeros(0, dtype=np.int64)]
+    pattern, stats = SparseDynamicExchange.discover(needs, off)
+    assert stats.n_procs == 3
+    assert stats.allreduce_ints == 9          # the P*P count matrix
+    assert stats.request_ints == 5            # total requested indices
+    # rank 0 pulls from ranks 1 and 2; rank 1 from 0 and 2; rank 2 idles
+    assert stats.request_partners.tolist() == [2, 2, 0]
+    # owners: rank 0 serves rank 1; rank 1 serves rank 0; rank 2 serves both
+    assert stats.serve_partners.tolist() == [1, 1, 2]
+    assert pattern.n_procs == 3
+    for p in range(3):
+        assert np.array_equal(pattern.needs[p], needs[p])
+    # ownership arrays agree with the block partition
+    assert pattern.owner_proc[4] == 1 and pattern.owner_proc[8] == 2
+
+
+def test_push_exchange_roundtrip():
+    rng = np.random.default_rng(3)
+    P_ = 4
+    dest = [rng.integers(0, P_, size=k) for k in (5, 0, 7, 3)]
+    payload = [
+        np.stack([np.full(len(d), p, dtype=float), rng.normal(size=len(d))],
+                 axis=-1)
+        for p, d in enumerate(dest)
+    ]
+    received, sources, stats = SparseDynamicExchange.push(dest, payload)
+    assert stats.allreduce_ints == P_ * P_
+    total = sum(len(d) for d in dest)
+    assert stats.request_ints == total
+    assert sum(len(r) for r in received) == total
+    for q in range(P_):
+        # every delivered row really was addressed to q, by its claimed src
+        for src, row in zip(sources[q], received[q]):
+            assert int(row[0]) == src
+        # sources arrive in ascending rank order (deterministic assembly)
+        assert np.all(np.diff(sources[q]) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# remote-row gather + local SpGEMM
+# ---------------------------------------------------------------------------
+
+
+def test_gather_remote_rows_roundtrip():
+    rng = np.random.default_rng(0)
+    A = random_csr(rng, 60, 45)
+    P_ = 4
+    off = block_offsets(A.nrows, P_)
+    blocks = split_rows(A, off)
+    topo = Topology(P_, 2)
+    cache = PlanCache()
+    needs = []
+    for p in range(P_):
+        lo, hi = int(off[p]), int(off[p + 1])
+        others = np.setdiff1d(np.arange(A.nrows), np.arange(lo, hi))
+        needs.append(np.sort(rng.choice(others, size=8, replace=False)))
+    g = gather_remote_rows(blocks, off, needs, topo, cache, strategy="auto")
+    for p in range(P_):
+        ref = A.take_rows(needs[p])
+        assert np.array_equal(g.rows[p].indptr, ref.indptr)
+        assert np.array_equal(g.rows[p].indices, ref.indices)
+        assert np.array_equal(g.rows[p].data, ref.data)
+    assert g.discovery.request_ints == sum(len(n) for n in needs)
+    # both exchange plans went through the cache
+    assert cache.misses == 2
+    # a second identical gather re-plans nothing
+    gather_remote_rows(blocks, off, needs, topo, cache, strategy="auto")
+    assert cache.misses == 2 and cache.hits == 2
+
+
+def test_spgemm_local_matches_matmat():
+    rng = np.random.default_rng(1)
+    L = random_csr(rng, 20, 30)
+    B = random_csr(rng, 30, 25)
+    ids = np.arange(30)
+    out = spgemm_local(L, ids, B)
+    ref = L.matmat(B)
+    assert np.abs(out.to_dense() - ref.to_dense()).max() < 1e-14
+    # row-subset path: only the referenced rows available, in sorted order
+    used = np.unique(L.indices)
+    out2 = spgemm_local(
+        CSR(L.shape, L.indptr, L.indices, L.data), used, B.take_rows(used)
+    )
+    assert np.abs(out2.to_dense() - ref.to_dense()).max() < 1e-14
+
+
+def test_spgemm_local_missing_rows_raises():
+    rng = np.random.default_rng(2)
+    L = random_csr(rng, 10, 12)
+    B = random_csr(rng, 12, 9)
+    present = np.unique(L.indices)[:-1]  # drop one referenced row
+    try:
+        spgemm_local(L, present, B.take_rows(present))
+    except ValueError as e:
+        assert "missing" in str(e)
+    else:
+        raise AssertionError("expected ValueError for missing rows")
+
+
+def test_merge_row_sets_sorted():
+    rng = np.random.default_rng(4)
+    M = random_csr(rng, 12, 8)
+    ids_a, ids_b = np.array([3, 4, 5]), np.array([0, 9, 11])
+    ids, sub = merge_row_sets(
+        ids_a, M.take_rows(ids_a), ids_b, M.take_rows(ids_b)
+    )
+    assert np.array_equal(ids, np.array([0, 3, 4, 5, 9, 11]))
+    assert np.abs(sub.to_dense() - M.take_rows(ids).to_dense()).max() == 0
+
+
+def test_rap_blocks_match_host_galerkin():
+    A = diffusion_2d(16, 16)
+    h = build_hierarchy(A)
+    lvl = h.levels[0]
+    P_ = 4
+    off = block_offsets(A.nrows, P_)
+    coff = block_offsets(lvl.R.nrows, P_)
+    topo = Topology(P_, 2)
+    cache = PlanCache()
+    res = spgemm_rap(
+        split_rows(lvl.R, coff), split_rows(A, off), split_rows(lvl.P, off),
+        off, topo, cache,
+    )
+    Ac = stack_blocks(res.Ac_blocks).prune(1e-14)
+    ref = h.levels[1].A
+    assert np.abs(Ac.to_dense() - ref.to_dense()).max() < 1e-12
+    # per-rank block equality, not only the assembled product
+    for p, blk in enumerate(res.Ac_blocks):
+        ref_blk = ref.take_rows(np.arange(coff[p], coff[p + 1]))
+        assert (
+            np.abs(blk.prune(1e-14).to_dense() - ref_blk.to_dense()).max()
+            < 1e-12
+        )
+
+
+# ---------------------------------------------------------------------------
+# full distributed setup vs host hierarchy
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_setup_matches_host_hierarchy():
+    A = diffusion_2d(24, 24)
+    h = build_hierarchy(A)
+    P_ = 6
+    blocks, off = partition_fine_matrix(A, P_)
+    ds = distributed_build_hierarchy(
+        blocks, off, Topology(P_, 2), cache=PlanCache()
+    )
+    hh = ds.to_host_hierarchy()
+    assert hh.n_levels == h.n_levels
+    for k in range(h.n_levels):
+        lh, ld = h.levels[k], hh.levels[k]
+        if lh.splitting is not None:
+            assert ld.splitting is not None
+            assert np.array_equal(lh.splitting, ld.splitting), f"L{k}"
+        assert np.abs(lh.A.to_dense() - ld.A.to_dense()).max() < 1e-12, f"L{k}"
+        if lh.P is not None and ld.P is not None:
+            assert np.abs(lh.P.to_dense() - ld.P.to_dense()).max() < 1e-12
+            assert np.abs(lh.R.to_dense() - ld.R.to_dense()).max() < 1e-12
+        assert abs(lh.rho - ld.rho) < 1e-6 * max(lh.rho, 1.0)
+    # exchange accounting covers every phase of the pipeline
+    phases = {r.phase for r in ds.records}
+    assert {"halo", "strength_transpose", "p_transpose",
+            "gather_A", "gather_P"} <= phases
+
+
+def test_setup_plans_served_from_cache_on_rebuild():
+    A = diffusion_2d(16, 16)
+    P_ = 4
+    blocks, off = partition_fine_matrix(A, P_)
+    topo = Topology(P_, 2)
+    cache = PlanCache()
+    distributed_build_hierarchy(blocks, off, topo, cache=cache)
+    misses = cache.misses
+    assert misses > 0 and cache.hits == 0
+    ds2 = distributed_build_hierarchy(blocks, off, topo, cache=cache)
+    # repeated build: every setup-phase exchange plan is a cache hit
+    assert cache.misses == misses
+    assert cache.hits == misses
+    assert cache.init_seconds_saved > 0.0
+    assert ds2.to_host_hierarchy().n_levels >= 2
+
+
+# ---------------------------------------------------------------------------
+# device lowering (8 virtual devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def run_prog(name: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, str(PROGS / name)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_setup_multidevice():
+    out = run_prog("check_distributed_setup.py")
+    assert "ALL_OK" in out
+    assert "levels OK" in out
+    assert "solve OK" in out
+    assert "plan cache OK" in out
