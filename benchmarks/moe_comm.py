@@ -1,0 +1,210 @@
+"""Shared MoE dispatch-benchmark substrate (the LM-side of amg_comm).
+
+Token -> expert dispatch is the canonical irregular exchange of the
+assigned LM pool; this module benchmarks it through the same planning
+stack the AMG levels use.  A batch's routing pattern is synthesized as a
+``CommPattern`` (push-side sparse dynamic data exchange,
+``models.moe.dispatch_pattern``), planned with all three strategies
+(standard / partial / full == a2a / hier / hier_dedup), and scored with
+the locality-aware max-rate model — message counts/bytes are EXACT plan
+quantities, network times for paper-scale EP groups are MODELED (this
+container has no network).  :func:`measured_moe_dispatch` additionally
+times the *real* jitted shard_map dispatch (through the plan/executor
+cache) on however many host-platform devices are available — measured,
+not modeled — and reports the capacity-health ``dropped_fraction``
+alongside.
+"""
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import TPU_V5E, build_plan, plan_time
+from repro.models.moe import (
+    STRATEGY_OF_MODE,
+    dispatch_pattern,
+    dispatch_topology,
+    make_moe_plan,
+    moe_plan_for,
+    select_moe_mode,
+)
+
+TRANSPORT_MODES = ("a2a", "hier", "hier_dedup")
+
+
+def _geometry_cfg(n_experts: int, top_k: int, d_model: int):
+    """Minimal ArchConfig stand-in: make_moe_plan only reads these."""
+    from repro.models.common import ArchConfig
+
+    return ArchConfig(
+        name=f"moe-bench-e{n_experts}k{top_k}", family="moe", n_layers=1,
+        d_model=d_model, n_heads=1, n_kv_heads=1, d_ff=0, vocab=1,
+        n_experts=n_experts, top_k=top_k, d_ff_expert=d_model,
+    )
+
+
+def _fake_mesh(pods: int, lanes_per_pod: int):
+    """Axis-shape stand-in for paper-scale EP groups (no devices needed:
+    make_moe_plan only reads axis_names and devices.shape)."""
+    if pods > 1:
+        return SimpleNamespace(axis_names=("pod", "data", "model"),
+                               devices=np.empty((pods, 1, lanes_per_pod)))
+    return SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.empty((1, lanes_per_pod)))
+
+
+def dispatch_plan(
+    tokens_per_lane: int = 1024,
+    n_experts: int = 8,
+    top_k: int = 2,
+    pods: int = 4,
+    lanes_per_pod: int = 16,
+    d_model: int = 4096,
+    cap_factor: float = 1.25,
+):
+    """Dispatch geometry for a (modeled) EP group of pods x lanes devices."""
+    cfg = _geometry_cfg(n_experts, top_k, d_model)
+    return make_moe_plan(cfg, _fake_mesh(pods, lanes_per_pod),
+                         tokens_per_lane, mode="a2a", cap_factor=cap_factor)
+
+
+def modeled_dispatch_rows(
+    tokens_per_lane: int = 1024,
+    n_experts: int = 8,
+    top_k: int = 2,
+    pods: int = 4,
+    lanes_per_pod: int = 16,
+    d_model: int = 4096,
+    value_bytes: int | None = None,
+    params=TPU_V5E,
+) -> List[Tuple[str, float, str]]:
+    """Per-mode modeled dispatch exchange + the Section-5 selector's pick.
+
+    One value on the wire is a full hidden-state row (``d_model`` bf16
+    entries unless ``value_bytes`` overrides); message counts are exact
+    plan quantities over the synthesized routing pattern.  A trailing
+    ``discovery`` row accounts the sparse-dynamic-exchange partner
+    discovery (allreduce ints) that a *non*-persistent dispatch would pay
+    every batch — the cost the plan cache amortizes away.
+    """
+    plan = dispatch_plan(tokens_per_lane, n_experts, top_k, pods,
+                         lanes_per_pod, d_model)
+    vb = value_bytes if value_bytes is not None else d_model * 2
+    pattern, stats, fp = dispatch_pattern(plan, tokens_per_lane)
+    topo = dispatch_topology(plan)
+    out = []
+    for mode in TRANSPORT_MODES:
+        cplan = build_plan(pattern, topo, STRATEGY_OF_MODE[mode],
+                           value_bytes=vb)
+        t = plan_time(cplan, params)
+        tt = cplan.stats.totals()
+        out.append((
+            f"moe_comm/modeled/{mode}",
+            t * 1e6,
+            f"kind=modeled-{params.name}|ep={plan.ep_size}"
+            f"|tokens={tokens_per_lane}|topk={top_k}"
+            f"|inter_msgs={tt['inter_msgs']}|inter_bytes={tt['inter_bytes']}"
+            f"|intra_msgs={tt['intra_msgs']}",
+        ))
+    chosen, report = select_moe_mode(plan, tokens_per_lane, vb, params)
+    out.append((
+        "moe_comm/selected",
+        report.modeled_times[STRATEGY_OF_MODE[chosen]] * 1e6,
+        f"kind=modeled-{params.name}|mode={chosen}"
+        f"|fingerprint={fp[:12]}",
+    ))
+    out.append((
+        "moe_comm/discovery",
+        0.0,
+        f"kind=exact-plan|allreduce_ints={stats.allreduce_ints}"
+        f"|request_ints={stats.request_ints}"
+        f"|max_serve_partners={stats.max_serve_partners}",
+    ))
+    return out
+
+
+def measured_moe_dispatch(
+    iters: int = 5,
+    warmup: int = 2,
+    batch: int = 4,
+    seq: int = 8,
+    params=TPU_V5E,
+) -> List[Tuple[str, float, str]]:
+    """MEASURED jitted dispatch on the local host-platform mesh.
+
+    Runs the reduced-Mixtral MoE layer under every transport (and under
+    ``auto``) through the plan/executor cache, timing steady-state calls —
+    the executor is built once per mode and reused, exactly the serving
+    path.  Requires >= 2 devices for a meaningful exchange; on 8 devices a
+    (pod=2, data=2, model=2) mesh exercises the inter-pod hierarchy.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import reduced
+    from repro.core import default_plan_cache
+    from repro.models.common import Initializer
+    from repro.models.moe import init_moe, moe_layer, moe_param_specs
+
+    n_dev = jax.device_count()
+    if n_dev >= 8:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        batch_axes: Tuple[str, ...] = ("pod", "data")
+    else:
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+        batch_axes = ("data",)
+    cfg0 = reduced("mixtral-8x7b")
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float32})
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch, seq, cfg.d_model))
+                    .astype(np.float32))
+    x_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+               None, None)
+    x = jax.device_put(x, NamedSharding(mesh, x_spec))
+    cache = default_plan_cache()
+
+    out = []
+    pin = None
+    for mode in TRANSPORT_MODES + ("auto",):
+        plan = moe_plan_for(cfg, mesh, tokens_per_lane=batch * seq,
+                            mode=mode, cap_factor=2.0, params=params,
+                            cache=cache)
+        if pin is None:  # e_phys is mode-independent: one param set
+            init = Initializer(3, jnp.float32)
+            host = {k: v[0] for k, v in
+                    init_moe(init, cfg, 1, plan.e_phys).items()}
+            specs = {k: P(*s[1:]) for k, s in
+                     moe_param_specs(cfg, plan).items()}
+            pin = {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+                   for k, v in host.items() if k in specs}
+
+        def step():
+            y, _aux, drop = moe_layer(x, pin, plan, cfg, mesh, batch_axes,
+                                      cache=cache)
+            return jax.block_until_ready(y), drop
+
+        for _ in range(warmup):
+            _y, drop = step()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _y, drop = step()
+        secs = (time.perf_counter() - t0) / iters
+        label = f"moe_comm/measured/{mode}"
+        resolved = f"|resolved={plan.mode}" if mode == "auto" else ""
+        out.append((
+            label, secs * 1e6,
+            f"kind=measured-device|devices={n_dev}{resolved}"
+            f"|dropped_fraction={float(drop):.4f}",
+        ))
+    s = cache.stats()
+    out.append((
+        "moe_comm/plan_cache",
+        0.0,
+        f"kind=exact-plan|hits={s['hits']}|misses={s['misses']}"
+        f"|exec_hits={s['exec_hits']}|exec_misses={s['exec_misses']}",
+    ))
+    return out

@@ -88,6 +88,22 @@ def measured_setup_exchange_rows(rows: int):
     return out
 
 
+def moe_comm_rows(smoke: bool):
+    """MoE dispatch exchange: modeled per-mode comparison on a paper-scale
+    EP group plus MEASURED jitted dispatch (all transports + auto) on the
+    local mesh, through the plan/executor cache."""
+    from .moe_comm import measured_moe_dispatch, modeled_dispatch_rows
+
+    if smoke:
+        rows = modeled_dispatch_rows(tokens_per_lane=256, pods=2,
+                                     lanes_per_pod=8)
+        rows += measured_moe_dispatch(iters=3, warmup=1)
+    else:
+        rows = modeled_dispatch_rows()
+        rows += measured_moe_dispatch()
+    return rows
+
+
 def build_sections(rows: int, smoke: bool):
     from . import paper_figs, roofline_report
 
@@ -112,6 +128,7 @@ def build_sections(rows: int, smoke: bool):
             ("measured_exchange", lambda: measured_exchange_rows(rows)),
             ("measured_setup_exchange",
              lambda: measured_setup_exchange_rows(rows)),
+            ("moe_comm", lambda: moe_comm_rows(smoke=True)),
             ("roofline", roofline_report.rows),
         ]
     return [
@@ -127,6 +144,7 @@ def build_sections(rows: int, smoke: bool):
         ("measured_exchange", lambda: measured_exchange_rows(rows)),
         ("measured_setup_exchange",
          lambda: measured_setup_exchange_rows(rows)),
+        ("moe_comm", lambda: moe_comm_rows(smoke=False)),
         ("roofline", roofline_report.rows),
     ]
 

@@ -31,7 +31,11 @@ def main():
     print("[moe] strategies agree — see DESIGN.md for the paper mapping:\n"
           "  a2a        = paper 'standard'   (flat all-to-all)\n"
           "  hier       = paper 'partial'    (3-step aggregation)\n"
-          "  hier_dedup = paper 'full'       (+ duplicate removal)")
+          "  hier_dedup = paper 'full'       (+ duplicate removal)\n"
+          "  auto       = paper Section 5    (cost-model selection,\n"
+          "               plan-cached via moe_plan_for — bit-identical\n"
+          "               to the selected mode, re-plans nothing on\n"
+          "               repeated batches)")
 
 
 if __name__ == "__main__":

@@ -18,14 +18,22 @@ Entry points:
 * :func:`pattern_fingerprint` — content hash of a :class:`CommPattern`.
 * :meth:`PlanCache.collective` — cached ``NeighborAlltoallV.init``.
 * :meth:`PlanCache.executor` — cached ``collective.bind(mesh, axis)``.
+* :meth:`PlanCache.moe_plan` / :meth:`PlanCache.moe_executor` — the same
+  amortization surface for MoE token dispatch (``models.moe.moe_plan_for``):
+  entries are keyed on the dispatch geometry plus a routing-pattern
+  fingerprint, values are opaque to the cache (an ``MoEPlan`` / a jitted
+  shard_map dispatch executor), and they share the miss/hit counters so a
+  forward pass whose routing re-plans nothing is *observable*.
 * :func:`default_plan_cache` — process-wide instance (used by
-  ``amg.distributed`` and the benchmarks unless a private cache is passed).
+  ``amg.distributed``, the MoE dispatch path and the benchmarks unless a
+  private cache is passed).
 """
 from __future__ import annotations
 
 import hashlib
+import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -82,6 +90,10 @@ class PlanCache:
     init_seconds_saved: float = 0.0
     _colls: Dict[Tuple, NeighborAlltoallV] = field(default_factory=dict)
     _execs: Dict[Tuple, Callable] = field(default_factory=dict)
+    # MoE dispatch surface: (value, init_seconds) keyed on geometry +
+    # routing-pattern fingerprint (see models.moe.moe_plan_for)
+    _moe_plans: Dict[Tuple, Tuple[Any, float]] = field(default_factory=dict)
+    _moe_execs: Dict[Tuple, Callable] = field(default_factory=dict)
 
     def collective(
         self,
@@ -133,6 +145,40 @@ class PlanCache:
         self._execs[key] = fn
         return fn
 
+    def moe_plan(self, key: Tuple, build: Callable[[], Any]) -> Any:
+        """Cached MoE dispatch plan — ``key`` must carry the full dispatch
+        geometry (mesh, tokens_per_lane, top_k, mode, cap_factor, ...) plus
+        the routing-pattern fingerprint; ``build`` runs only on a miss.
+
+        Shares :attr:`hits` / :attr:`misses` with the collective surface so
+        tests can assert "a repeated forward re-plans nothing" across both
+        the AMG and the MoE paths with one counter.
+        """
+        entry = self._moe_plans.get(key)
+        if entry is not None:
+            self.hits += 1
+            self.init_seconds_saved += entry[1]
+            return entry[0]
+        self.misses += 1
+        t0 = time.perf_counter()
+        value = build()
+        secs = time.perf_counter() - t0
+        self.init_seconds_spent += secs
+        self._moe_plans[key] = (value, secs)
+        return value
+
+    def moe_executor(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
+        """Cached jitted dispatch executor for an MoE plan (counts as an
+        executor hit/miss, mirroring :meth:`executor`)."""
+        fn = self._moe_execs.get(key)
+        if fn is not None:
+            self.exec_hits += 1
+            return fn
+        self.exec_misses += 1
+        fn = build()
+        self._moe_execs[key] = fn
+        return fn
+
     def stats(self) -> Dict[str, float]:
         return {
             "hits": self.hits,
@@ -146,6 +192,8 @@ class PlanCache:
     def clear(self) -> None:
         self._colls.clear()
         self._execs.clear()
+        self._moe_plans.clear()
+        self._moe_execs.clear()
 
 
 _DEFAULT_CACHE: Optional[PlanCache] = None

@@ -34,7 +34,7 @@ of the planning stack (``core.plan`` / ``core.locality``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +67,19 @@ class DiscoveryStats:
         return int(self.serve_partners.max()) if self.n_procs else 0
 
 
+def _stats_from_counts(counts: np.ndarray) -> DiscoveryStats:
+    """DiscoveryStats of one allreduce-on-counts round, from the reduced
+    ``P x P`` count matrix (row = sender/requester, col = receiver/owner)."""
+    n_procs = counts.shape[0]
+    return DiscoveryStats(
+        n_procs=n_procs,
+        allreduce_ints=n_procs * n_procs,
+        request_ints=int(counts.sum()),
+        request_partners=(counts > 0).sum(axis=1),
+        serve_partners=(counts > 0).sum(axis=0),
+    )
+
+
 class SparseDynamicExchange:
     """Allreduce-on-counts partner discovery (arXiv 2308.13869)."""
 
@@ -92,13 +105,59 @@ class SparseDynamicExchange:
                 owners = np.searchsorted(proc_offsets, need, side="right") - 1
                 np.add.at(counts[p], owners, 1)
         pattern = CommPattern.from_block_partition(needs, proc_offsets)
-        return pattern, DiscoveryStats(
-            n_procs=n_procs,
-            allreduce_ints=n_procs * n_procs,
-            request_ints=int(counts.sum()),
-            request_partners=(counts > 0).sum(axis=1),
-            serve_partners=(counts > 0).sum(axis=0),
-        )
+        return pattern, _stats_from_counts(counts)
+
+    @staticmethod
+    def push_pattern(
+        dest: Sequence[np.ndarray],
+        local_ids: Optional[Sequence[np.ndarray]] = None,
+        n_local: Optional[Sequence[int]] = None,
+    ) -> Tuple[CommPattern, DiscoveryStats]:
+        """Push-side discovery as a :class:`CommPattern` — the persistent
+        half of :meth:`push`.
+
+        Rank ``p`` owns ``n_local[p]`` values; entry ``i`` of ``dest[p]``
+        pushes the value locally indexed ``local_ids[p][i]`` (default: row
+        ``i`` itself) to rank ``dest[p][i]``.  Globally, rank ``p``'s value
+        ``j`` is index ``offset[p] + j``; the receiver's ghost order matches
+        :meth:`push` delivery (ascending source rank, original order within
+        a source).  The same value may be pushed to several destinations
+        (MoE top-k fan-out) — that duplication is exactly what the
+        paper's index extension lets the ``full`` planner remove, so the
+        returned pattern is directly scoreable by ``core.selection``.
+        Feed it to ``PlanCache.collective`` / fingerprint it for
+        ``PlanCache.moe_plan`` keys.
+        """
+        n_procs = len(dest)
+        dest = [np.asarray(d, dtype=np.int64) for d in dest]
+        if local_ids is None:
+            local_ids = [np.arange(len(d), dtype=np.int64) for d in dest]
+        else:
+            local_ids = [np.asarray(i, dtype=np.int64) for i in local_ids]
+        if n_local is None:
+            n_local = [
+                max(len(d), int(i.max()) + 1 if len(i) else 0)
+                for d, i in zip(dest, local_ids)
+            ]
+        offsets = np.zeros(n_procs + 1, dtype=np.int64)
+        offsets[1:] = np.cumsum(n_local)
+        counts = np.zeros((n_procs, n_procs), dtype=np.int64)
+        for p, d in enumerate(dest):
+            if len(d):
+                np.add.at(counts[p], d, 1)
+        needs: List[np.ndarray] = []
+        for q in range(n_procs):
+            chunks = [
+                offsets[p] + local_ids[p][dest[p] == q]
+                for p in range(n_procs)
+                if len(dest[p])
+            ]
+            needs.append(
+                np.concatenate(chunks) if chunks
+                else np.zeros(0, dtype=np.int64)
+            )
+        pattern = CommPattern.from_block_partition(needs, offsets)
+        return pattern, _stats_from_counts(counts)
 
     @staticmethod
     def push(
@@ -124,7 +183,13 @@ class SparseDynamicExchange:
         trailing = next(
             (v.shape[1:] for v in payload if v.ndim > 1), ()
         )
-        dtype = next((v.dtype for v in payload if len(v)), np.float64)
+        # empty-receiver buffers must still carry the senders' declared
+        # dtype: an all-empty exchange has no non-empty payload to inspect,
+        # so fall back to any payload array's dtype before float64
+        dtype = next(
+            (v.dtype for v in payload if len(v)),
+            next((v.dtype for v in payload), np.float64),
+        )
         # one stable sort per sender groups its rows by destination; the
         # per-receiver assembly is then pure concatenation (ascending rank,
         # original order within a rank — same deterministic layout)
@@ -149,10 +214,4 @@ class SparseDynamicExchange:
             else:
                 received.append(np.zeros((0,) + trailing, dtype=dtype))
                 sources.append(np.zeros(0, dtype=np.int64))
-        return received, sources, DiscoveryStats(
-            n_procs=n_procs,
-            allreduce_ints=n_procs * n_procs,
-            request_ints=int(counts.sum()),
-            request_partners=(counts > 0).sum(axis=1),
-            serve_partners=(counts > 0).sum(axis=0),
-        )
+        return received, sources, _stats_from_counts(counts)

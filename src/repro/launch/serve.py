@@ -22,7 +22,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0)
-    ap.add_argument("--moe-mode", default="a2a")
+    ap.add_argument("--moe-mode", default="auto",
+                help="MoE dispatch: auto (Section-5 selection) | a2a | hier | hier_dedup | dense")
     args = ap.parse_args()
 
     from .. import configs

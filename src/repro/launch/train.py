@@ -35,7 +35,8 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
-    ap.add_argument("--moe-mode", default="a2a")
+    ap.add_argument("--moe-mode", default="auto",
+                help="MoE dispatch: auto (Section-5 selection) | a2a | hier | hier_dedup | dense")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
 

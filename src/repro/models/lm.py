@@ -49,7 +49,15 @@ from .attention import (
 )
 from .blocks import dense_block, init_dense_block, init_mlp, mlp
 from .common import ArchConfig, Initializer, rms_norm
-from .moe import MoEPlan, init_moe, make_moe_plan, moe_layer, moe_param_specs
+from ..core import default_plan_cache
+from .moe import (
+    MoEPlan,
+    init_moe,
+    make_moe_plan,
+    moe_layer,
+    moe_param_specs,
+    moe_plan_for,
+)
 from .ssm import init_mamba, init_mamba_state, mamba_block
 
 
@@ -62,7 +70,7 @@ class Model:
         self,
         cfg: ArchConfig,
         mesh: Optional[Mesh] = None,
-        moe_mode: str = "hier",
+        moe_mode: str = "auto",
         ep_over_pods: bool = True,
         remat: bool = True,
         fsdp: bool = False,
@@ -94,9 +102,7 @@ class Model:
             a for a in ("pod", "data") if a in axes
         )
         if cfg.family == "moe":
-            probe = make_moe_plan(cfg, self.mesh, 8, mode=moe_mode,
-                                  ep_over_pods=ep_over_pods)
-            self.e_phys = probe.e_phys
+            self.e_phys = self._probe_plan().e_phys
         else:
             self.e_phys = 0
         # per-layer window schedule (dense/vlm/moe)
@@ -108,6 +114,15 @@ class Model:
             dtype=np.int32,
         ) if cfg.window and cfg.local_global_period else np.full(
             cfg.n_layers, cfg.window, dtype=np.int32
+        )
+
+    def _probe_plan(self, tokens_per_lane: int = 8) -> MoEPlan:
+        """Geometry-only plan (e_phys / param sharding don't depend on the
+        transport, so ``auto`` probes with the flat-a2a geometry)."""
+        return make_moe_plan(
+            self.cfg, self.mesh, tokens_per_lane,
+            mode=("a2a" if self.moe_mode == "auto" else self.moe_mode),
+            ep_over_pods=self.ep_over_pods,
         )
 
     # ------------------------------------------------------------------ init
@@ -173,11 +188,7 @@ class Model:
         cfg = self.cfg
         axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         fsdp_ax = "data" if (self.fsdp and axes.get("data", 1) > 1) else None
-        moe_plan = (
-            make_moe_plan(cfg, self.mesh, 8, mode=self.moe_mode,
-                          ep_over_pods=self.ep_over_pods)
-            if cfg.family == "moe" else None
-        )
+        moe_plan = self._probe_plan() if cfg.family == "moe" else None
         moe_specs = moe_param_specs(cfg, moe_plan) if moe_plan else {}
 
         col = {"wq", "wk", "wv", "wz", "wx", "wB", "wC", "wdt",
@@ -320,7 +331,9 @@ class Model:
         )
         axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         lanes = axes["model"]
-        plan = make_moe_plan(
+        # cached planning: repeated forwards on an unchanged mesh and token
+        # count hit the plan cache (mode="auto" -> Section-5 selection)
+        plan = moe_plan_for(
             cfg, self.mesh, max(1, n_tok_dev // lanes),
             mode=self.moe_mode, ep_over_pods=self.ep_over_pods,
             cap_factor=self.moe_cap_factor,
@@ -340,8 +353,9 @@ class Model:
                                      window=cfg.window)
             h = h + a
             hn = rms_norm(h, p_l["ln2"])
-            y, aux_l = moe_layer(hn, p_l["moe"], plan, cfg, self.mesh,
-                                 self.batch_axes)
+            y, aux_l, _drop = moe_layer(hn, p_l["moe"], plan, cfg, self.mesh,
+                                        self.batch_axes,
+                                        cache=default_plan_cache())
             if cfg.n_shared_experts:
                 y = y + mlp({"w_" + k[3:]: v for k, v in p_l["moe"].items()
                              if k.startswith("ws_")}, hn, cfg.act)

@@ -24,6 +24,29 @@ one-to-one onto MoE serving/training:
 ``dense``      no dispatch at all: every device computes its local expert
                shard for all (replicated) tokens, masked by router weights —
                the naive pjit-auto baseline for benchmarks.
+``auto``       (paper: *Section-5 dynamic selection*)  not a transport but a
+               selector: the batch's routing pattern is expressed as a
+               ``core.plan.CommPattern`` (push-side sparse dynamic data
+               exchange, arXiv 2308.13869), the three candidate strategies
+               are scored with the locality-aware max-rate cost model
+               (``core.costmodel``), and the cheapest of a2a / hier /
+               hier_dedup is chosen — the same per-pattern choice the AMG
+               levels make.  ``dense`` is never auto-selected (it is a
+               baseline, not a transport).
+
+Plan-cache lifecycle
+--------------------
+:func:`moe_plan_for` is the cached entry point (``lm``, ``serving`` and
+``serve.engine`` all plan through it): dispatch geometry plus a
+routing-pattern fingerprint key an entry in ``core.cache.PlanCache``, so
+the expensive init — representative-routing construction, candidate
+planning, Section-5 selection — runs once per (mesh, tokens_per_lane,
+top_k, mode, cap_factor) shape.  Repeated batches and decode steps on an
+unchanged mesh and token count re-plan *nothing* (observable as zero new
+``PlanCache`` misses).  :func:`moe_layer` additionally memoizes its jitted
+shard_map dispatch executor in the same cache (``moe_executor``), so the
+per-layer transport program is built once and reused across layers, calls
+and solves — the MoE analogue of ``MPI_Neighbor_alltoallv_init``.
 
 Implementation notes
 --------------------
@@ -41,6 +64,7 @@ Implementation notes
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -49,11 +73,27 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core import (
+    CommPattern,
+    SparseDynamicExchange,
+    Topology,
+    default_plan_cache,
+    pattern_fingerprint,
+    select_plan,
+)
+from ..core.costmodel import MachineParams, TPU_V5E
+from ..core.dynexchange import DiscoveryStats
+from ..core.selection import SelectionReport
 from ..kernels.moe_pack import combine as pack_combine
 from ..kernels.moe_pack import pack as pack_gather
 from .common import ArchConfig, Initializer, activation
 
 MODES = ("dense", "a2a", "hier", "hier_dedup")
+
+# paper strategy <-> MoE transport (the Section-5 selector speaks strategy)
+STRATEGY_OF_MODE = {"a2a": "standard", "hier": "partial",
+                    "hier_dedup": "full"}
+MODE_OF_STRATEGY = {v: k for k, v in STRATEGY_OF_MODE.items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +113,7 @@ class MoEPlan:
     devs_per_region: int
     uniq_capacity: int           # Cu: unique tokens per (src lane, region)
     cap_factor: float
+    fingerprint: str = ""        # routing-pattern fingerprint (cache identity)
 
     @property
     def replicas(self) -> int:
@@ -99,7 +140,13 @@ def make_moe_plan(
     ep_axes = ("pod", "model") if has_pod else ("model",)
     ep_size = int(np.prod([axes[a] for a in ep_axes]))
     e_log = cfg.n_experts
-    r = max(1, math.ceil(ep_size / e_log))
+    # least replication r >= ceil(ep_size/e_log) with e_log*r divisible by
+    # ep_size, so every device hosts the same number of physical experts
+    # even when n_experts does not pack evenly onto the EP group (e.g. 3
+    # logical experts on 4 devices -> r=4, e_phys=12, 3 per device)
+    r0 = max(1, math.ceil(ep_size / e_log))
+    step = ep_size // math.gcd(e_log, ep_size)
+    r = ((r0 + step - 1) // step) * step
     e_phys = e_log * r
     assert e_phys % ep_size == 0, (e_phys, ep_size)
     e_per_dev = e_phys // ep_size
@@ -128,6 +175,164 @@ def make_moe_plan(
         devs_per_region=devs_per_region, uniq_capacity=uniq,
         cap_factor=cap_factor,
     )
+
+
+# ---------------------------------------------------------------------------
+# planned dispatch: routing pattern -> CommPattern -> Section-5 selection ->
+# PlanCache (the persistent 'init' shared with the AMG levels)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def _routing_pattern(
+    ep_size: int,
+    e_log: int,
+    replicas: int,
+    e_per_dev: int,
+    capacity: int,
+    top_k: int,
+    tokens_per_lane: int,
+) -> Tuple[CommPattern, DiscoveryStats, str]:
+    """Representative dispatch routing of one batch as a ``CommPattern``.
+
+    Tokens know their expert; experts do not know their senders — the
+    push-side sparse dynamic data exchange.  Routing is synthesized from a
+    fixed-seed uniform router (the load-balanced steady state the aux loss
+    drives toward), replicated and capacity-packed with exactly the
+    semantics of :func:`route` / :func:`capacity_pack`, then discovered via
+    :meth:`SparseDynamicExchange.push_pattern`: lane ``p`` owns its
+    ``tokens_per_lane`` token values, each kept (token, k) pair pushes that
+    token to the destination device.  A token routed to several experts of
+    one region appears as duplicate global indices — what the ``full``
+    planner dedups.  Deterministic, so the fingerprint is stable across
+    calls and processes: repeated batches and decode steps key the same
+    cache entry.
+    """
+    e_phys = e_log * replicas
+    N, k = tokens_per_lane, top_k
+    dest: list = []
+    local_ids: list = []
+    for p in range(ep_size):
+        rng = np.random.default_rng(p)
+        eid = np.argsort(rng.random((N, e_log)), axis=1)[:, :k]
+        rep = (np.arange(N) % replicas)[:, None]
+        phys = (eid * replicas + rep).reshape(-1)
+        # capacity packing: rank within each physical expert, token-major
+        order = np.argsort(phys, kind="stable")
+        sorted_e = phys[order]
+        starts = np.r_[0, np.flatnonzero(np.diff(sorted_e)) + 1]
+        run_len = np.diff(np.r_[starts, len(phys)])
+        rank = np.empty(len(phys), np.int64)
+        rank[order] = np.arange(len(phys)) - np.repeat(starts, run_len)
+        keep = rank < capacity
+        dest.append((phys[keep] // e_per_dev).astype(np.int64))
+        local_ids.append((np.repeat(np.arange(N), k)[keep]).astype(np.int64))
+    pattern, stats = SparseDynamicExchange.push_pattern(
+        dest, local_ids, n_local=[N] * ep_size
+    )
+    return pattern, stats, pattern_fingerprint(pattern)
+
+
+def dispatch_pattern(
+    plan: MoEPlan, tokens_per_lane: int
+) -> Tuple[CommPattern, DiscoveryStats, str]:
+    """(pattern, discovery stats, fingerprint) of ``plan``'s dispatch.
+
+    Region topology is deliberately absent: the pattern records only who
+    needs which values; locality enters at planning time via
+    :func:`dispatch_topology`."""
+    return _routing_pattern(
+        plan.ep_size, plan.e_log, plan.replicas,
+        plan.e_per_dev, plan.capacity, plan.top_k, tokens_per_lane,
+    )
+
+
+def dispatch_topology(plan: MoEPlan) -> Topology:
+    """EP group as a locality topology: regions are pods (or single
+    devices when EP does not span pods), pod-major device order — the
+    same layout :func:`ep_exchange` moves data in."""
+    return Topology(plan.ep_size, max(1, plan.devs_per_region))
+
+
+def select_moe_mode(
+    plan: MoEPlan,
+    tokens_per_lane: int,
+    value_bytes: int,
+    params: MachineParams = TPU_V5E,
+) -> Tuple[str, SelectionReport]:
+    """Section-5 dynamic selection over a2a / hier / hier_dedup.
+
+    Scores the three candidate strategies on the batch's routing pattern
+    with the locality-aware max-rate model (message counts and bytes are
+    exact plan quantities; ``value_bytes`` is the full hidden-state row) and
+    returns the winning transport mode — mirroring the per-level AMG
+    strategy choice.
+    """
+    pattern, _stats, _fp = dispatch_pattern(plan, tokens_per_lane)
+    _plan, report = select_plan(
+        pattern, dispatch_topology(plan), params=params,
+        value_bytes=value_bytes,
+        candidates=tuple(MODE_OF_STRATEGY),
+    )
+    return MODE_OF_STRATEGY[report.chosen], report
+
+
+def moe_plan_for(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    tokens_per_lane: int,
+    mode: str = "auto",
+    ep_over_pods: bool = True,
+    cap_factor: float = 1.25,
+    dedup_factor: Optional[float] = None,
+    params: MachineParams = TPU_V5E,
+    cache=None,
+) -> MoEPlan:
+    """Cached dispatch planning — the entry point ``lm`` / ``serving`` /
+    ``serve.engine`` use instead of calling :func:`make_moe_plan` per call.
+
+    Keyed on (mesh, tokens_per_lane, top_k, mode, cap_factor, ...) plus the
+    routing-pattern fingerprint in ``core.cache.PlanCache`` (process-wide
+    default unless ``cache`` is passed): the first call for a shape builds
+    the geometry, synthesizes the routing pattern and — for
+    ``mode="auto"`` — runs the Section-5 selector; every later call with an
+    unchanged mesh and token count is a cache hit that re-plans nothing.
+
+    The pattern synthesis behind the fingerprint is itself memoized
+    (:func:`dispatch_pattern` lru), so its O(ep_size * tokens * experts)
+    numpy cost is paid once per dispatch geometry per process — the same
+    amortization class as the planning it keys.
+    """
+    cache = default_plan_cache() if cache is None else cache
+    geom = make_moe_plan(
+        cfg, mesh, tokens_per_lane,
+        mode=("a2a" if mode == "auto" else mode),
+        ep_over_pods=ep_over_pods, cap_factor=cap_factor,
+        dedup_factor=dedup_factor,
+    )
+    if geom.mode == "dense":
+        # no dispatch exchange to plan: geometry is the whole plan
+        return geom
+    _pattern, _stats, fp = dispatch_pattern(geom, tokens_per_lane)
+    value_bytes = cfg.d_model * np.dtype(cfg.dtype).itemsize
+    # mesh enters the key by content (axes x shape): a rebuilt-but-equal
+    # mesh still hits, mirroring the content-hashed pattern fingerprints
+    mesh_key = (tuple(mesh.axis_names), tuple(np.shape(mesh.devices)))
+    key = (
+        "moe_plan", mesh_key, tokens_per_lane, cfg.n_experts, cfg.top_k,
+        mode, ep_over_pods, cap_factor, dedup_factor, value_bytes, params,
+        fp,
+    )
+
+    def build() -> MoEPlan:
+        chosen = mode
+        if mode == "auto":
+            chosen, _report = select_moe_mode(
+                geom, tokens_per_lane, value_bytes, params
+            )
+        return dataclasses.replace(geom, mode=chosen, fingerprint=fp)
+
+    return cache.moe_plan(key, build)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +428,15 @@ def capacity_pack(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Assign each (token, k) a slot in the [E_phys * C] send layout.
 
+    Drop order: pairs claim expert slots in token-major order (flat index
+    ``token * k + j``), so when an expert overflows its capacity ``C`` the
+    *late-sequence* tokens are the ones dropped — first-come-first-served
+    by sequence position, NOT random or load-aware.  This bias is invisible
+    in the outputs (dropped pairs just get zero combine weight), which is
+    why :func:`moe_dispatch_lane` surfaces a ``dropped_fraction`` scalar:
+    benchmarks and tests assert capacity health instead of silently
+    under-serving the end of every sequence.
+
     Returns (slot [N,k] (sentinel E_phys*C when dropped), keep [N,k],
     slot_token [E_phys*C]: source token per slot, sentinel N when empty)."""
     N, k = phys.shape
@@ -300,11 +514,24 @@ def moe_dispatch_lane(
     params: Dict,                # per-layer slices; expert weights LOCAL shard
     plan: MoEPlan,
     cfg: ArchConfig,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (y_lane [N, D], aux scalar)."""
+    valid: Optional[jnp.ndarray] = None,   # [N] bool; False rows are pads
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (y_lane [N, D], aux scalar, dropped_fraction scalar).
+
+    ``dropped_fraction`` is the fraction of this lane's *valid* (token, k)
+    pairs that lost their expert slot to capacity overflow (see
+    :func:`capacity_pack` for the token-major drop order) — 0 in ``dense``
+    mode, which routes nothing.  ``valid`` masks sequence-padding rows out
+    of the metric (pads are still routed and can consume capacity, but
+    they are not real tokens: counting them would distort the fraction
+    whenever tokens don't divide the lane count).  An all-pad lane reports
+    1.0 — weight lane fractions by their valid-pair count when averaging
+    (as :func:`moe_layer` does)."""
     N, D = x_lane.shape
     C = plan.capacity
     act_fn = activation(cfg.act)
+    if valid is None:
+        valid = jnp.ones((N,), bool)
     phys, w, aux = route(x_lane, params["router"], plan)
 
     if plan.mode == "dense":
@@ -318,7 +545,7 @@ def moe_dispatch_lane(
         wk = jnp.sum(match * w[None].astype(jnp.float32), axis=-1)
         y = jnp.einsum("en,end->nd", wk, y_all.astype(jnp.float32))
         y = jax.lax.psum(y, "model")
-        return y.astype(x_lane.dtype), aux
+        return y.astype(x_lane.dtype), aux, jnp.zeros((), jnp.float32)
 
     slot, keep, slot_token = capacity_pack(phys, plan)
     w = w * keep.astype(w.dtype)
@@ -326,8 +553,15 @@ def moe_dispatch_lane(
     x_pad = jnp.concatenate([x_lane, jnp.zeros((1, D), x_lane.dtype)], 0)
     send = pack_gather(x_pad, jnp.minimum(slot_token, N))  # [E_phys*C, D]
 
+    # delivered = pairs whose expert output actually comes back; the dedup
+    # path can additionally lose pairs to uniq_capacity overflow (their
+    # fan-out reads the zero pad row), which must be just as observable as
+    # expert-capacity drops
+    delivered = keep
     if plan.mode == "hier_dedup" and plan.top_k > 1:
-        yb = _dedup_outbound(x_lane, slot, keep, phys, params, plan, act_fn)
+        yb, pair_ok = _dedup_outbound(x_lane, slot, keep, phys, params,
+                                      plan, act_fn)
+        delivered = keep & pair_ok.reshape(N, plan.top_k)
     else:
         recv = ep_exchange(send, plan)                   # by source device
         xb = recv.reshape(plan.ep_size, plan.e_per_dev, C, D)
@@ -341,9 +575,13 @@ def moe_dispatch_lane(
         ).reshape(plan.ep_size * plan.e_per_dev * C, D)
     y_recv = ep_exchange_back(yb.astype(x_lane.dtype), plan)
 
+    kept_real = jnp.sum((delivered & valid[:, None]).astype(jnp.float32))
+    n_real = jnp.sum(valid.astype(jnp.float32)) * plan.top_k
+    dropped = 1.0 - kept_real / jnp.maximum(n_real, 1.0)
+
     buf = jnp.concatenate([y_recv, jnp.zeros((1, D), y_recv.dtype)], 0)
     y = pack_combine(buf, jnp.minimum(slot, plan.e_phys * C), w)
-    return y.astype(x_lane.dtype), aux
+    return y.astype(x_lane.dtype), aux, dropped
 
 
 def moe_layer(
@@ -353,33 +591,23 @@ def moe_layer(
     cfg: ArchConfig,
     mesh: Mesh,
     batch_axes: Tuple[str, ...],
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cache=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """shard_map wrapper: sequence-shard tokens over 'model' lanes, dispatch,
-    all_gather the lane outputs back.  Returns (y [B,S,D], aux scalar)."""
+    all_gather the lane outputs back.  Returns (y [B,S,D], aux scalar,
+    dropped_fraction scalar — mean over lanes, see :func:`capacity_pack`).
+
+    When ``cache`` (a ``core.cache.PlanCache``) is given, the jitted
+    shard_map dispatch executor is memoized in it keyed on (plan, mesh,
+    specs, param-tree structure): every MoE layer of every forward reuses
+    one compiled transport program per dispatch geometry instead of
+    rebuilding it each call.
+    """
     from ..compat import shard_map
 
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     Pm = axes["model"]
     all_axes = tuple(mesh.axis_names)
-
-    def body(xb, *pvals):
-        pb = jax.tree.unflatten(ptree, pvals)
-        b_loc, S, D = xb.shape
-        n_all = b_loc * S
-        xf = xb.reshape(n_all, D)
-        if plan.mode == "dense":
-            y, aux = moe_dispatch_lane(xf, pb, plan, cfg)
-            return y.reshape(b_loc, S, D), jax.lax.pmean(aux, all_axes)
-        n_pad = n_all + ((-n_all) % Pm)
-        if n_pad != n_all:
-            xf = jnp.pad(xf, ((0, n_pad - n_all), (0, 0)))
-        n_lane = n_pad // Pm
-        m = jax.lax.axis_index("model")
-        x_lane = jax.lax.dynamic_slice(xf, (m * n_lane, 0), (n_lane, D))
-        y_lane, aux = moe_dispatch_lane(x_lane, pb, plan, cfg)
-        y = jax.lax.all_gather(y_lane, "model", axis=0, tiled=True)
-        y = y[:n_all].reshape(b_loc, S, D)
-        return y, jax.lax.pmean(aux, all_axes)
 
     pspecs = moe_param_specs(cfg, plan)
     # strip the leading L axis from the specs (params are per-layer slices)
@@ -401,22 +629,63 @@ def moe_layer(
                    None, None)
     else:
         x_spec = P(None, None, None)
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(x_spec,) + tuple(spec_flat),
-        out_specs=(x_spec, P()),
-        check_vma=False,
-    )
-    y, aux = fn(x, *pflat)
-    return y, aux
+
+    def build():
+        def body(xb, *pvals):
+            pb = jax.tree.unflatten(ptree, pvals)
+            b_loc, S, D = xb.shape
+            n_all = b_loc * S
+            xf = xb.reshape(n_all, D)
+            if plan.mode == "dense":
+                y, aux, drop = moe_dispatch_lane(xf, pb, plan, cfg)
+                return (y.reshape(b_loc, S, D),
+                        jax.lax.pmean(aux, all_axes),
+                        jax.lax.pmean(drop, all_axes))
+            n_pad = n_all + ((-n_all) % Pm)
+            if n_pad != n_all:
+                xf = jnp.pad(xf, ((0, n_pad - n_all), (0, 0)))
+            n_lane = n_pad // Pm
+            m = jax.lax.axis_index("model")
+            x_lane = jax.lax.dynamic_slice_in_dim(xf, m * n_lane, n_lane, 0)
+            # pad rows (appended past n_all) are routed but masked out of
+            # the capacity-health metric; lane fractions are averaged
+            # weighted by their real-pair counts
+            valid = m * n_lane + jnp.arange(n_lane) < n_all
+            y_lane, aux, drop = moe_dispatch_lane(x_lane, pb, plan, cfg,
+                                                  valid=valid)
+            y = jax.lax.all_gather(y_lane, "model", axis=0, tiled=True)
+            y = y[:n_all].reshape(b_loc, S, D)
+            nv = jnp.sum(valid.astype(jnp.float32))
+            drop = jax.lax.psum(drop * nv, all_axes) / jnp.maximum(
+                jax.lax.psum(nv, all_axes), 1.0
+            )
+            return y, jax.lax.pmean(aux, all_axes), drop
+
+        return jax.jit(shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(x_spec,) + tuple(spec_flat),
+            out_specs=(x_spec, P(), P()),
+            check_vma=False,
+        ))
+
+    if cache is not None:
+        key = ("moe_exec", plan, mesh, x_spec, ptree, cfg.act)
+        fn = cache.moe_executor(key, build)
+    else:
+        fn = build()
+    y, aux, dropped = fn(x, *pflat)
+    return y, aux, dropped
 
 
 def _dedup_outbound(x_lane, slot, keep, phys, params, plan, act_fn):
     """Paper's fully-optimized outbound: one copy per (token, dst region) +
     int32 metadata; fan out to expert slots inside the region.
 
-    Returns expert outputs laid out [G(src device, pod-major) * eC, D]."""
+    Returns (expert outputs laid out [G(src device, pod-major) * eC, D],
+    pair_ok [N*k] bool: pairs whose token won a uniq slot and will come
+    back — pairs beyond ``uniq_capacity`` fan out from the zero pad row,
+    i.e. they are dropped and the caller must count them as such)."""
     N, D = x_lane.shape
     C = plan.capacity
     Rg = plan.region_size
@@ -504,4 +773,4 @@ def _dedup_outbound(x_lane, slot, keep, phys, params, plan, act_fn):
     yo = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
                      act_fn, xb)
     yb = yo.reshape(plan.e_per_dev, Rg, Dg, C, D).transpose(1, 2, 0, 3, 4)
-    return yb.reshape(plan.ep_size * eC, D)
+    return yb.reshape(plan.ep_size * eC, D), pair_ok

@@ -28,10 +28,11 @@ from .attention import (
     project_cross_kv,
     gqa_cross_from_cache,
 )
+from ..core import default_plan_cache
 from .blocks import mlp
 from .common import rms_norm
 from .lm import Model, _stack_slice
-from .moe import make_moe_plan, moe_layer
+from .moe import moe_layer, moe_plan_for
 from .ssm import init_mamba_state, mamba_block
 
 
@@ -93,17 +94,29 @@ def _decode_attn(p_l, x, cur, cfg, window, cache):
 # ---------------------------------------------------------------------------
 
 
-def _moe_ffn(model: Model, p_l, h, n_tokens):
-    cfg = model.cfg
+def moe_plan_for_model(model: Model, n_tokens: int, cache=None):
+    """The dispatch plan a ``model`` forward uses for ``n_tokens`` global
+    tokens — the single key-derivation site, shared between `_moe_ffn`
+    and ``serve.engine``'s pre-warm so the two can never drift apart.
+
+    Cached planning: every decode step (n_tokens=B) and every prefill of
+    an equal prompt length key the same plan-cache entry — steady-state
+    serving re-plans nothing."""
     axes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
     lanes = axes["model"]
     n_dev = max(1, int(np.prod([axes[a] for a in model.batch_axes])))
-    plan = make_moe_plan(
-        cfg, model.mesh, max(1, n_tokens // n_dev // lanes),
+    return moe_plan_for(
+        model.cfg, model.mesh, max(1, n_tokens // n_dev // lanes),
         mode=model.moe_mode, ep_over_pods=model.ep_over_pods,
-        cap_factor=model.moe_cap_factor,
+        cap_factor=model.moe_cap_factor, cache=cache,
     )
-    y, _ = moe_layer(h, p_l["moe"], plan, cfg, model.mesh, model.batch_axes)
+
+
+def _moe_ffn(model: Model, p_l, h, n_tokens):
+    cfg = model.cfg
+    plan = moe_plan_for_model(model, n_tokens)
+    y, _, _ = moe_layer(h, p_l["moe"], plan, cfg, model.mesh,
+                        model.batch_axes, cache=default_plan_cache())
     if cfg.n_shared_experts:
         y = y + mlp({"w_" + k[3:]: v for k, v in p_l["moe"].items()
                      if k.startswith("ws_")}, h, cfg.act)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import default_plan_cache
 from ..models import Model, serving
 
 
@@ -54,6 +55,19 @@ class ServeEngine:
         self.caches = None
         self.cur_len = 0
         self._next_tok = np.zeros((batch_slots, 1), np.int32)
+        # dispatch planning is hoisted out of the decode loop: the engine's
+        # decode token count is static (one token per slot), so the MoE
+        # dispatch plan is built once here and every decode step hits it
+        self.plan_cache = default_plan_cache()
+        if model.cfg.family == "moe":
+            self._warm_moe_plan()
+
+    def _warm_moe_plan(self) -> None:
+        """Pre-plan the decode-step MoE dispatch through the same helper
+        `_moe_ffn` keys with (n_tokens = batch_slots), so even the first
+        decode step re-plans nothing."""
+        serving.moe_plan_for_model(self.model, self.B,
+                                   cache=self.plan_cache)
 
     def submit(self, req: Request):
         self.queue.append(req)

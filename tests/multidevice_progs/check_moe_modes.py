@@ -1,6 +1,10 @@
 """Subprocess: MoE dispatch strategies agree on a (pod,data,model)=(2,2,2)
 mesh — the paper's standard/partial/full mapped onto EP must be numerically
-identical transports (ample capacity => no drops)."""
+identical transports (ample capacity => no drops).  Also asserts the
+planned-dispatch contract: ``mode="auto"`` (Section-5 selection) picks a
+concrete transport whose output is BIT-identical to the explicitly chosen
+mode, and a repeated forward on the unchanged mesh/token count reports zero
+new plan-cache misses."""
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -11,7 +15,14 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import reduced
-from repro.models.moe import MODES, make_moe_plan, moe_layer, init_moe
+from repro.core import default_plan_cache
+from repro.models.moe import (
+    MODES,
+    init_moe,
+    make_moe_plan,
+    moe_layer,
+    moe_plan_for,
+)
 from repro.models.common import Initializer
 
 
@@ -50,29 +61,37 @@ def main():
     x = jnp.asarray(rng.normal(size=(B, S, D)).astype(np.float32))
     x = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None, None)))
 
+    def params_for(plan):
+        from repro.models.moe import moe_param_specs
+        init = Initializer(3, jnp.float32)
+        params = {k: v[0] for k, v in
+                  init_moe(init, cfg, 1, plan.e_phys).items()}
+        specs = {k: P(*s[1:]) for k, s in
+                 moe_param_specs(cfg, plan).items()}
+        return {
+            k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in params.items() if k in specs
+        }
+
+    def run(plan, pin):
+        y, aux, drop = jax.jit(
+            lambda xx, pp: moe_layer(xx, pp, plan, cfg, mesh,
+                                     ("pod", "data"))
+        )(x, pin)
+        return np.asarray(y), float(aux), float(drop)
+
     results = {}
     for mode in MODES:
         for ep_over_pods in ([False, True] if mode != "dense" else [False]):
             plan = make_moe_plan(cfg, mesh, tokens_per_lane=B * S,
                                  mode=mode, ep_over_pods=ep_over_pods,
                                  cap_factor=8.0, dedup_factor=1.0)
-            from repro.models.moe import moe_param_specs
-            init = Initializer(3, jnp.float32)
-            params = {k: v[0] for k, v in
-                      init_moe(init, cfg, 1, plan.e_phys).items()}
-            specs = {k: P(*s[1:]) for k, s in
-                     moe_param_specs(cfg, plan).items()}
-            pin = {
-                k: jax.device_put(v, NamedSharding(mesh, specs[k]))
-                for k, v in params.items() if k in specs
-            }
-            y, aux = jax.jit(
-                lambda xx, pp: moe_layer(xx, pp, plan, cfg, mesh,
-                                         ("pod", "data"))
-            )(x, pin)
+            y, aux, drop = run(plan, params_for(plan))
             key = f"{mode}{'+pods' if ep_over_pods else ''}"
-            results[key] = np.asarray(y)
-            print(f"{key:16s} aux={float(aux):.4f} |y|={np.abs(y).mean():.4f}")
+            results[key] = y
+            print(f"{key:16s} aux={aux:.4f} |y|={np.abs(y).mean():.4f} "
+                  f"dropped={drop:.4f}")
+            assert drop == 0.0, (key, drop)  # ample capacity => no drops
 
     # replication differs between plans (e_phys) but logical routing must
     # agree; compare every mode against flat a2a (no pods)
@@ -81,6 +100,39 @@ def main():
         err = np.abs(val - ref).max()
         print(f"{key:16s} max|diff vs a2a| = {err:.2e}")
         assert err < 1e-4, (key, err)
+
+    # ---- planned dispatch: auto selection + plan-cache amortization -------
+    cache = default_plan_cache()
+    kw = dict(mode="auto", ep_over_pods=True, cap_factor=8.0,
+              dedup_factor=1.0)
+    plan_auto = moe_plan_for(cfg, mesh, tokens_per_lane=B * S, **kw)
+    assert plan_auto.mode in ("a2a", "hier", "hier_dedup"), plan_auto.mode
+    assert plan_auto.fingerprint, "auto plan must carry its fingerprint"
+    m0 = cache.misses
+    plan_again = moe_plan_for(cfg, mesh, tokens_per_lane=B * S, **kw)
+    assert plan_again is plan_auto and cache.misses == m0, \
+        "second identical planning call must re-plan nothing"
+    print(f"auto selected: {plan_auto.mode}")
+
+    pin = params_for(plan_auto)
+    y_auto, _, _ = run(plan_auto, pin)
+    explicit = make_moe_plan(cfg, mesh, tokens_per_lane=B * S,
+                             mode=plan_auto.mode, ep_over_pods=True,
+                             cap_factor=8.0, dedup_factor=1.0)
+    y_exp, _, _ = run(explicit, pin)
+    assert np.array_equal(y_auto, y_exp), \
+        "auto output must be bit-identical to the explicitly chosen mode"
+    print("auto bit-identical to", plan_auto.mode)
+
+    # repeated forward through the cached executor: zero new misses
+    m0, e0 = cache.misses, cache.exec_misses
+    for _ in range(2):
+        y, _, _ = jax.jit(
+            lambda xx, pp: moe_layer(xx, pp, plan_auto, cfg, mesh,
+                                     ("pod", "data"), cache=cache)
+        )(x, pin)
+    assert cache.misses == m0, "repeated forward must not re-plan"
+    assert cache.exec_misses <= e0 + 1, "executor built at most once"
     print("ALL_OK")
 
 

@@ -1,8 +1,10 @@
-"""Batched serving engine: slot recycling, drain, output consistency."""
+"""Batched serving engine: slot recycling, drain, output consistency,
+and MoE dispatch-plan amortization across decode steps."""
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced
+from repro.core import default_plan_cache
 from repro.models import Model
 from repro.serve import Request, ServeEngine
 
@@ -29,3 +31,27 @@ def test_engine_drains_mixed_requests():
     for r in done:
         assert len(r.generated) == r.max_new_tokens
         assert all(0 <= t < cfg.vocab for t in r.generated)
+
+
+def test_moe_engine_decode_replans_nothing():
+    """Serving a MoE model: the engine pre-plans its static decode-step
+    dispatch at construction, so decode steps cause zero additional
+    plan-cache misses — the whole point of the persistent collective."""
+    cfg0 = reduced("mixtral-8x7b")
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float32})
+    model = Model(cfg, moe_mode="auto", remat=False, moe_cap_factor=8.0)
+    params = model.init_params(seed=0)
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32)
+    assert eng.plan_cache is default_plan_cache()
+    rng = np.random.default_rng(1)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(0, cfg.vocab, size=(4,))
+                       .astype(np.int32),
+                       max_new_tokens=6))
+    eng.step()                      # admit + prefill (may plan: new shape)
+    eng.step()                      # first decode: plan pre-warmed at init
+    cache = eng.plan_cache
+    m0, e0 = cache.misses, cache.exec_misses
+    for _ in range(3):
+        eng.step()
+    assert (cache.misses, cache.exec_misses) == (m0, e0)
