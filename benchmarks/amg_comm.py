@@ -189,12 +189,15 @@ def measured_setup_exchange(
     params=LASSEN,
     iters: int = 10,
     warmup: int = 2,
+    tracer=None,
 ) -> List[Tuple[str, str, float]]:
     """MEASURED device execution of the setup-phase gather exchanges.
 
     Binds the jitted executor of every Galerkin payload pattern on the
     local mesh (same protocol as :func:`measured_device_exchange`) and
-    times it; returns [(label, strategy, seconds)].
+    times it; returns [(label, strategy, seconds)].  ``tracer`` (a
+    ``repro.profile.TraceRecorder``) records each timing against its plan
+    for the calibration flow.
     """
     import jax
 
@@ -226,6 +229,9 @@ def measured_setup_exchange(
             exchange, n_procs, int(rec.pattern.n_local.max()),
             dtype=np.float64, iters=iters, warmup=warmup,
         )
+        if tracer is not None:
+            tracer.record_plan(coll.plan, secs,
+                               label=f"setup/L{rec.level}/{rec.phase}")
         out.append(
             (f"L{rec.level}/{rec.phase}", coll.strategy, secs)
         )
@@ -240,6 +246,7 @@ def measured_device_exchange(
     params=LASSEN,
     iters: int = 30,
     warmup: int = 5,
+    tracer=None,
 ) -> List[Tuple[int, str, float]]:
     """MEASURED per-level device exchange wall time on the local mesh.
 
@@ -280,5 +287,7 @@ def measured_device_exchange(
             exchange, n_procs, int(pattern.n_local.max()),
             dtype=np.float64, iters=iters, warmup=warmup,
         )
+        if tracer is not None:
+            tracer.record_plan(coll.plan, secs, label=f"amg/L{lvl}")
         out.append((lvl, coll.strategy, secs))
     return out

@@ -132,6 +132,7 @@ def measured_moe_dispatch(
     batch: int = 4,
     seq: int = 8,
     params=TPU_V5E,
+    tracer=None,
 ) -> List[Tuple[str, float, str]]:
     """MEASURED jitted dispatch on the local host-platform mesh.
 
@@ -140,6 +141,11 @@ def measured_moe_dispatch(
     the executor is built once per mode and reused, exactly the serving
     path.  Requires >= 2 devices for a meaningful exchange; on 8 devices a
     (pod=2, data=2, model=2) mesh exercises the inter-pod hierarchy.
+
+    ``tracer`` (a ``repro.profile.TraceRecorder``) records each mode's
+    per-call wall time against its dispatch plan with
+    ``pure_exchange=False`` — the timing includes expert compute, so these
+    samples inform reporting but are excluded from rate fitting.
     """
     import jax
     import jax.numpy as jnp
@@ -193,6 +199,15 @@ def measured_moe_dispatch(
         for _ in range(iters):
             _y, drop = step()
         secs = (time.perf_counter() - t0) / iters
+        if tracer is not None:
+            pattern, _st, _fp = dispatch_pattern(plan, batch * seq)
+            cplan = build_plan(
+                pattern, dispatch_topology(plan),
+                STRATEGY_OF_MODE[plan.mode],
+                value_bytes=cfg.d_model * 4,  # f32 hidden rows on the wire
+            )
+            tracer.record_plan(cplan, secs, label=f"moe/{mode}",
+                               pure_exchange=False)
         label = f"moe_comm/measured/{mode}"
         resolved = f"|resolved={plan.mode}" if mode == "auto" else ""
         out.append((

@@ -20,17 +20,36 @@ import argparse
 import json
 import os
 import pathlib
+import subprocess
 import sys
 import time
 
 SMOKE_ROWS = 4096
 SMOKE_PROCS = 64          # modeled process count for the smoke problem
+SCHEMA_VERSION = 2        # results-JSON schema (bump on layout changes)
 
 
-def measured_exchange_rows(rows: int):
+def _git_sha() -> str | None:
+    """Best-effort commit stamp so CI artifacts from different PRs are
+    comparable; None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=pathlib.Path(__file__).parent,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except Exception:
+        return None
+
+
+def measured_exchange_rows(rows: int, tracer=None):
     """Per-level MEASURED device exchange (auto-selected strategy) on the
     local host-platform mesh; a small problem keeps setup fast.  kind=
-    measured-device distinguishes these from the modeled network rows."""
+    measured-device distinguishes these from the modeled network rows.
+    ``tracer`` records every timing for the --calibrate fit (so the
+    calibration section reuses these measurements instead of re-timing)."""
     import jax
 
     # measured exchanges must move 8-byte values to be comparable with the
@@ -52,7 +71,7 @@ def measured_exchange_rows(rows: int):
     }
     out = []
     for lvl, strategy, secs in measured_device_exchange(
-        bench_rows, n_procs, params=params
+        bench_rows, n_procs, params=params, tracer=tracer
     ):
         rep = selected.get(lvl)
         modeled = (f"modeled_us={rep.modeled_times[strategy] * 1e6:.1f}"
@@ -71,7 +90,7 @@ def setup_exchange_modeled(rows: int, n_procs: int):
     return setup_exchange_rows(min(rows, 65_536), n_procs)
 
 
-def measured_setup_exchange_rows(rows: int):
+def measured_setup_exchange_rows(rows: int, tracer=None):
     """MEASURED setup-phase gather exchanges on the local mesh."""
     import jax
 
@@ -80,7 +99,9 @@ def measured_setup_exchange_rows(rows: int):
     from .amg_comm import measured_setup_exchange
 
     out = []
-    for label, strategy, secs in measured_setup_exchange(min(rows, 65_536)):
+    for label, strategy, secs in measured_setup_exchange(
+        min(rows, 65_536), tracer=tracer
+    ):
         out.append(
             (f"measured_setup_exchange/{label}", secs * 1e6,
              f"kind=measured-device|strategy={strategy}|")
@@ -88,7 +109,7 @@ def measured_setup_exchange_rows(rows: int):
     return out
 
 
-def moe_comm_rows(smoke: bool):
+def moe_comm_rows(smoke: bool, tracer=None):
     """MoE dispatch exchange: modeled per-mode comparison on a paper-scale
     EP group plus MEASURED jitted dispatch (all transports + auto) on the
     local mesh, through the plan/executor cache."""
@@ -97,14 +118,144 @@ def moe_comm_rows(smoke: bool):
     if smoke:
         rows = modeled_dispatch_rows(tokens_per_lane=256, pods=2,
                                      lanes_per_pod=8)
-        rows += measured_moe_dispatch(iters=3, warmup=1)
+        rows += measured_moe_dispatch(iters=3, warmup=1, tracer=tracer)
     else:
         rows = modeled_dispatch_rows()
-        rows += measured_moe_dispatch()
+        rows += measured_moe_dispatch(tracer=tracer)
     return rows
 
 
-def build_sections(rows: int, smoke: bool):
+def calibration_rows(rows: int, out_dir: pathlib.Path, smoke: bool,
+                     tracer=None):
+    """The measure -> fit -> re-select loop (ROADMAP's measured-vs-modeled
+    calibration item), as one benchmark section.
+
+    Fits MachineParams (``repro.profile.calibrate``) from the trace the
+    measured sections recorded earlier in this run (``tracer`` — the
+    exchanges are timed once, not re-run), then re-runs Section-5
+    selection under the *fitted* rates and reports it side by side with
+    the shipped-constant selection — flagging every level/mode where the
+    choice flips.  Standalone use (no pre-filled tracer) measures the
+    per-level AMG and setup-phase gather exchanges itself.  The trace and
+    the fitted params are written as JSON next to the results artifact.
+    Non-finite fitted params or an unbounded residual raise (fatal in
+    --smoke: the CI calibration gate).
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    import numpy as np
+
+    from repro.core import LASSEN
+    from repro.models.moe import STRATEGY_OF_MODE, select_moe_mode
+    from repro.profile import TraceRecorder, fit_trace, selection_flips
+
+    from .amg_comm import (
+        VALUE_BYTES,
+        bench_topology,
+        level_patterns,
+        measured_device_exchange,
+        measured_setup_exchange,
+    )
+    from .moe_comm import dispatch_plan, measured_moe_dispatch
+
+    bench_rows = min(rows, 65_536)
+    n_procs = jax.device_count()
+    shipped = LASSEN
+    if tracer is None:
+        tracer = TraceRecorder()
+    if not tracer.merged_rate_samples():
+        # standalone: the measured sections did not run first — time the
+        # pure exchanges here (MoE dispatch rows are reporting-only:
+        # pure_exchange=False, they include expert compute)
+        measured_device_exchange(bench_rows, n_procs, params=shipped,
+                                 tracer=tracer)
+        measured_setup_exchange(bench_rows, params=shipped, tracer=tracer)
+        measured_moe_dispatch(iters=2, warmup=1, tracer=tracer)
+
+    # --- fit --------------------------------------------------------------
+    result = fit_trace(tracer, name=f"fitted-{shipped.name}", ref=shipped)
+    fitted = result.params
+    gof = result.gof
+    # artifacts FIRST: a diverged fit is exactly when the trace must be
+    # inspectable, so the JSONs exist even if the gate below raises
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tracer.save(out_dir / "trace.json")
+    result.save(out_dir / "fitted_params.json")
+    # one definition of "converged" (CalibrationResult: gof flag + finite
+    # params) plus a residual bound — the CI calibration gate
+    if not result.converged or not np.isfinite(gof["rel_rmse"]) \
+            or gof["rel_rmse"] > 10.0:
+        raise RuntimeError(
+            f"calibration fit did not converge: "
+            f"converged={result.converged} gof={gof}"
+        )
+
+    out = []
+    s = tracer.summary()
+    out.append((
+        "calibrate/trace", 0.0,
+        f"kind=measured-device|samples={s['samples']}"
+        f"|pure={s['pure_samples']}|patterns={s['patterns']}",
+    ))
+    for f in ("alpha_intra", "beta_intra", "alpha_inter", "beta_inter",
+              "region_injection_bw"):
+        a, b = float(getattr(shipped, f)), float(getattr(fitted, f))
+        out.append((
+            f"calibrate/params/{f}", 0.0,
+            f"kind=measured-fit|shipped={a:.4g}|fitted={b:.4g}"
+            f"|ratio={b / a:.3f}",
+        ))
+    out.append((
+        "calibrate/fit", 0.0,
+        f"kind=measured-fit|n={result.n_samples}"
+        f"|rel_rmse={gof['rel_rmse']:.4f}|r2={gof['r2']:.4f}"
+        f"|iters={int(gof['outer_iters'])}"
+        f"|converged={bool(gof['converged'])}",
+    ))
+
+    # --- re-select: Section-5 under fitted vs shipped rates ---------------
+    labeled = [
+        (f"L{lvl}", pat)
+        for lvl, (pat, _n) in enumerate(level_patterns(bench_rows, n_procs))
+    ]
+    flip_rows = selection_flips(labeled, bench_topology(n_procs), shipped,
+                                fitted, value_bytes=VALUE_BYTES)
+    flips = 0
+    for r in flip_rows:
+        flips += r["flip"] == "yes"
+        out.append((
+            f"calibrate/selection/{r['label']}", 0.0,
+            f"kind=measured-fit|shipped={r['shipped']}"
+            f"|fitted={r['fitted']}|flip={r['flip']}",
+        ))
+    # MoE dispatch mode selection under both parameter sets
+    geom = dispatch_plan(tokens_per_lane=256, pods=2, lanes_per_pod=8) \
+        if smoke else dispatch_plan()
+    vb = 4096 * 2
+    mode_s, _ = select_moe_mode(geom, 256 if smoke else 1024, vb, shipped)
+    mode_f, _ = select_moe_mode(geom, 256 if smoke else 1024, vb, fitted)
+    out.append((
+        "calibrate/selection/moe", 0.0,
+        f"kind=measured-fit|shipped={mode_s}|fitted={mode_f}"
+        f"|flip={'yes' if mode_s != mode_f else 'no'}"
+        f"|strategies={STRATEGY_OF_MODE[mode_s]}->"
+        f"{STRATEGY_OF_MODE[mode_f]}",
+    ))
+    out.append((
+        "calibrate/flips", float(flips),
+        f"kind=measured-fit|levels={len(flip_rows)}"
+        f"|topo={bench_topology(n_procs).n_regions}regions",
+    ))
+
+    return out
+
+
+def build_sections(rows: int, smoke: bool, tracer=None):
+    """Section list; ``tracer`` (set by --calibrate) makes the measured
+    sections record their timings so the calibration fit reuses them
+    instead of re-timing the same exchanges."""
     from . import paper_figs, roofline_report
 
     if smoke:
@@ -125,10 +276,12 @@ def build_sections(rows: int, smoke: bool):
             ("amg", lambda: paper_figs.amg_solver_convergence(rows)),
             ("setup_exchange",
              lambda: setup_exchange_modeled(rows, SMOKE_PROCS)),
-            ("measured_exchange", lambda: measured_exchange_rows(rows)),
+            ("measured_exchange",
+             lambda: measured_exchange_rows(rows, tracer)),
             ("measured_setup_exchange",
-             lambda: measured_setup_exchange_rows(rows)),
-            ("moe_comm", lambda: moe_comm_rows(smoke=True)),
+             lambda: measured_setup_exchange_rows(rows, tracer)),
+            ("moe_comm", lambda: moe_comm_rows(smoke=True,
+                                               tracer=tracer)),
             ("roofline", roofline_report.rows),
         ]
     return [
@@ -141,10 +294,11 @@ def build_sections(rows: int, smoke: bool):
         ("fig13", lambda: paper_figs.fig13_weak_scaling()),
         ("amg", paper_figs.amg_solver_convergence),
         ("setup_exchange", lambda: setup_exchange_modeled(rows, 256)),
-        ("measured_exchange", lambda: measured_exchange_rows(rows)),
+        ("measured_exchange",
+         lambda: measured_exchange_rows(rows, tracer)),
         ("measured_setup_exchange",
-         lambda: measured_setup_exchange_rows(rows)),
-        ("moe_comm", lambda: moe_comm_rows(smoke=False)),
+         lambda: measured_setup_exchange_rows(rows, tracer)),
+        ("moe_comm", lambda: moe_comm_rows(smoke=False, tracer=tracer)),
         ("roofline", roofline_report.rows),
     ]
 
@@ -165,6 +319,13 @@ def main(argv=None) -> int:
         help="write results JSON here (default in --smoke mode: "
         "benchmarks/results/smoke.json)",
     )
+    ap.add_argument(
+        "--calibrate", action="store_true",
+        help="run the measure->fit->re-select calibration loop: measure "
+        "real exchanges, fit MachineParams (repro.profile), rerun the "
+        "Section-5 selector under fitted rates, report any mode flips; "
+        "writes trace.json + fitted_params.json next to the results JSON",
+    )
     args = ap.parse_args(argv)
     rows = SMOKE_ROWS if args.smoke else args.rows
     out_path = args.out
@@ -176,8 +337,21 @@ def main(argv=None) -> int:
     t_start = time.time()
     collected = []
     failures = []
+    tracer = None
+    if args.calibrate:
+        from repro.profile import TraceRecorder
+
+        tracer = TraceRecorder()   # shared: measured sections feed the fit
+    sections = build_sections(rows, args.smoke, tracer)
+    if args.calibrate:
+        art_dir = (pathlib.Path(out_path).parent if out_path
+                   else pathlib.Path(__file__).parent / "results")
+        sections.append(
+            ("calibrate",
+             lambda: calibration_rows(rows, art_dir, args.smoke, tracer))
+        )
     print("name,us_per_call,derived")
-    for section, fn in build_sections(rows, args.smoke):
+    for section, fn in sections:
         t0 = time.time()
         try:
             for name, us, derived in fn():
@@ -199,6 +373,8 @@ def main(argv=None) -> int:
 
     if out_path:
         payload = {
+            "schema_version": SCHEMA_VERSION,
+            "git_sha": _git_sha(),
             "rows_param": rows,
             "smoke": args.smoke,
             "total_seconds": total,

@@ -4,14 +4,87 @@ sliding-window).  Uses the same serving path the decode_32k / long_500k
 dry-run cells lower.
 
     PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b
+
+Adaptive re-planning demo (the repro.profile feedback loop): serve a
+reduced MoE model, let the engine observe its measured per-batch expert
+histograms, then skew the routing mid-run — the histogram drift triggers
+exactly one re-fingerprint/re-selection of the dispatch plan, printed with
+the before/after transport mode.  Deterministic on the 8 virtual host
+devices test.sh configures:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python examples/serve_decode.py --adaptive
 """
 import sys
 
-from repro.launch import serve
+
+def adaptive_demo():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import reduced
+    from repro.models import Model
+    from repro.serve import Request, ServeEngine
+
+    cfg0 = reduced("mixtral-8x7b")
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float32})
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    model = Model(cfg, mesh=mesh, moe_mode="auto", remat=False,
+                  moe_cap_factor=8.0)
+    params = model.init_params(seed=0)
+    eng = ServeEngine(model, params, batch_slots=2, max_len=96,
+                      adaptive=True, drift_threshold=0.3, drift_warmup=2)
+    rng = np.random.default_rng(1)
+    eng.submit(Request(
+        rid=0,
+        prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+        max_new_tokens=80,
+    ))
+    eng.step()                                        # admit + prefill
+    print(f"engine: {n_dev} devices, experts={cfg.n_experts} "
+          f"top_k={cfg.top_k}, initial mode={eng.moe_plan.mode} "
+          f"(Section-5 auto)")
+
+    for _ in range(12):                               # steady workload
+        eng.step()
+    ref = eng.planner.reference_fractions()
+    print(f"steady: {eng.planner.observed} observations, "
+          f"expert fractions={np.round(ref, 3)}, "
+          f"replan events={len(eng.replan_events)}")
+
+    # skew the workload: a zero router ties every logit, so top-k sends
+    # every token to experts {0..k-1} — a maximal routing drift
+    params["blocks"]["moe"]["router"] = jnp.zeros_like(
+        params["blocks"]["moe"]["router"]
+    )
+    pre_mode = eng.moe_plan.mode
+    for _ in range(30):
+        eng.step()
+        if eng.replan_events:
+            break
+    for ev in eng.replan_events:
+        print(f"drift detected: {ev}")
+    if eng.replan_events:
+        print(f"migrated dispatch mode: {pre_mode} -> {eng.moe_plan.mode} "
+              f"(histogram-fingerprinted plan, cached in PlanCache)")
+    else:
+        print("no drift event (unexpected on the 8-device demo config)")
+    for _ in range(4):                                # decode continues
+        eng.step()
+    print(f"post-migration decodes OK, total replan events: "
+          f"{len(eng.replan_events)} (expected exactly 1)")
+    s = eng.plan_cache.stats()
+    print(f"plan cache: hits={s['hits']} misses={s['misses']} "
+          f"evictions={s['evictions']}")
 
 
 def main():
     argv = sys.argv[1:]
+    if "--adaptive" in argv:
+        adaptive_demo()
+        return
     if "--arch" not in argv:
         argv = ["--arch", "gemma3-1b"] + argv
     if "--reduced" not in argv:

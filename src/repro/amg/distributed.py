@@ -378,14 +378,17 @@ class DistributedHierarchy:
         return "\n".join(lines)
 
     def measure_exchange_seconds(
-        self, iters: int = 20, warmup: int = 3
+        self, iters: int = 20, warmup: int = 3, tracer=None
     ) -> List[Tuple[int, str, float]]:
         """Measured (not modeled) per-level device exchange wall time.
 
         Times the jitted bound executor of each level's operator halo on
         the real mesh (shared protocol: ``core.collectives.time_executor``);
         returns [(level, strategy, seconds_per_exchange)].  Levels without
-        ghost columns have no exchange and report 0.0.
+        ghost columns have no exchange and report 0.0.  When ``tracer`` (a
+        ``repro.profile.TraceRecorder``) is given, each level's timing is
+        recorded against its plan — the measured feed of the
+        measured-vs-modeled calibration loop.
         """
         from ..core.collectives import time_executor
 
@@ -402,6 +405,9 @@ class DistributedHierarchy:
                 iters=iters,
                 warmup=warmup,
             )
+            if tracer is not None:
+                tracer.record_plan(lv.A.coll.plan, secs,
+                                   label=f"amg/L{lv.index}")
             out.append((lv.index, lv.A.strategy, secs))
         return out
 

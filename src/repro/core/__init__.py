@@ -20,7 +20,16 @@ from .plan import (
     padded_wire_volume,
 )
 from .locality import STRATEGIES, build_plan, plan_full, plan_partial, plan_standard
-from .costmodel import LASSEN, MACHINES, TPU_V5E, MachineParams, plan_time
+from .costmodel import (
+    LASSEN,
+    MACHINES,
+    TPU_V5E,
+    MachineParams,
+    RateSample,
+    fit_machine_params,
+    plan_time,
+    stats_time,
+)
 from .selection import SelectionReport, per_pattern_best, select_plan
 from .collectives import (
     DevicePlan,
@@ -45,7 +54,8 @@ __all__ = [
     "CommPattern", "CommPlan", "CommStep", "Message", "PlanStats", "StepStats",
     "Topology", "color_rounds", "padded_wire_volume",
     "STRATEGIES", "build_plan", "plan_full", "plan_partial", "plan_standard",
-    "LASSEN", "MACHINES", "TPU_V5E", "MachineParams", "plan_time",
+    "LASSEN", "MACHINES", "TPU_V5E", "MachineParams", "RateSample",
+    "fit_machine_params", "plan_time", "stats_time",
     "SelectionReport", "per_pattern_best", "select_plan",
     "DevicePlan", "build_device_plan", "make_executor",
     "pack_local_values", "time_executor", "unpack_ghosts",

@@ -80,12 +80,23 @@ def plan_cache_key(
 
 @dataclass
 class PlanCache:
-    """Cache of initialized collectives and bound device executors."""
+    """Cache of initialized collectives and bound device executors.
+
+    Bounded: each namespace (collectives, executors, MoE plans, MoE
+    executors) holds at most :attr:`max_entries` entries under LRU
+    eviction — many distinct routing fingerprints (e.g. adaptive MoE
+    re-planning over drifting histograms) can no longer grow the cache
+    without bound.  Evictions are counted (:attr:`evictions`) and
+    :meth:`stats` breaks hits/misses/entries out per namespace, which is
+    what ``repro.profile`` reads when reporting amortization.
+    """
 
     hits: int = 0
     misses: int = 0
     exec_hits: int = 0
     exec_misses: int = 0
+    evictions: int = 0
+    max_entries: int = 512          # per namespace; <= 0 disables the bound
     init_seconds_spent: float = 0.0
     init_seconds_saved: float = 0.0
     _colls: Dict[Tuple, NeighborAlltoallV] = field(default_factory=dict)
@@ -94,6 +105,27 @@ class PlanCache:
     # routing-pattern fingerprint (see models.moe.moe_plan_for)
     _moe_plans: Dict[Tuple, Tuple[Any, float]] = field(default_factory=dict)
     _moe_execs: Dict[Tuple, Callable] = field(default_factory=dict)
+    _ns_counts: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    # ---------------------------------------------------- LRU bookkeeping
+    def _ns(self, name: str) -> Dict[str, int]:
+        return self._ns_counts.setdefault(name, {"hits": 0, "misses": 0})
+
+    def _lookup(self, store: Dict, key, ns: str):
+        """LRU-aware get: a hit moves the entry to the recent end."""
+        entry = store.get(key)
+        if entry is not None:
+            store[key] = store.pop(key)    # dicts iterate in insert order
+            self._ns(ns)["hits"] += 1
+        else:
+            self._ns(ns)["misses"] += 1
+        return entry
+
+    def _insert(self, store: Dict, key, value, ns: str) -> None:
+        if self.max_entries > 0 and len(store) >= self.max_entries:
+            store.pop(next(iter(store)))   # least-recently used
+            self.evictions += 1
+        store[key] = value
 
     def collective(
         self,
@@ -105,7 +137,7 @@ class PlanCache:
     ) -> NeighborAlltoallV:
         """Cached ``NeighborAlltoallV.init`` — a hit skips re-planning."""
         key = plan_cache_key(pattern, topo, strategy, value_bytes, params)
-        coll = self._colls.get(key)
+        coll = self._lookup(self._colls, key, "collective")
         if coll is not None:
             self.hits += 1
             self.init_seconds_saved += coll.init_seconds
@@ -115,7 +147,7 @@ class PlanCache:
             pattern, topo, strategy, value_bytes=value_bytes, params=params
         )
         self.init_seconds_spent += coll.init_seconds
-        self._colls[key] = coll
+        self._insert(self._colls, key, coll, "collective")
         return coll
 
     def executor(
@@ -136,13 +168,13 @@ class PlanCache:
         if coll is None:
             coll = self.collective(pattern, topo, strategy, value_bytes, params)
         key = (ckey, mesh, axis_name)
-        fn = self._execs.get(key)
+        fn = self._lookup(self._execs, key, "executor")
         if fn is not None:
             self.exec_hits += 1
             return fn
         self.exec_misses += 1
         fn = coll.bind(mesh, axis_name)
-        self._execs[key] = fn
+        self._insert(self._execs, key, fn, "executor")
         return fn
 
     def moe_plan(self, key: Tuple, build: Callable[[], Any]) -> Any:
@@ -154,7 +186,7 @@ class PlanCache:
         tests can assert "a repeated forward re-plans nothing" across both
         the AMG and the MoE paths with one counter.
         """
-        entry = self._moe_plans.get(key)
+        entry = self._lookup(self._moe_plans, key, "moe_plan")
         if entry is not None:
             self.hits += 1
             self.init_seconds_saved += entry[1]
@@ -164,29 +196,44 @@ class PlanCache:
         value = build()
         secs = time.perf_counter() - t0
         self.init_seconds_spent += secs
-        self._moe_plans[key] = (value, secs)
+        self._insert(self._moe_plans, key, (value, secs), "moe_plan")
         return value
 
     def moe_executor(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
         """Cached jitted dispatch executor for an MoE plan (counts as an
         executor hit/miss, mirroring :meth:`executor`)."""
-        fn = self._moe_execs.get(key)
+        fn = self._lookup(self._moe_execs, key, "moe_executor")
         if fn is not None:
             self.exec_hits += 1
             return fn
         self.exec_misses += 1
         fn = build()
-        self._moe_execs[key] = fn
+        self._insert(self._moe_execs, key, fn, "moe_executor")
         return fn
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, Any]:
+        """Flat legacy counters plus per-namespace hit/miss/entry counts
+        (the surface ``repro.profile`` and the benchmarks report)."""
+        sizes = {
+            "collective": len(self._colls),
+            "executor": len(self._execs),
+            "moe_plan": len(self._moe_plans),
+            "moe_executor": len(self._moe_execs),
+        }
         return {
             "hits": self.hits,
             "misses": self.misses,
             "exec_hits": self.exec_hits,
             "exec_misses": self.exec_misses,
+            "evictions": self.evictions,
+            "entries": sum(sizes.values()),
+            "max_entries": self.max_entries,
             "init_seconds_spent": self.init_seconds_spent,
             "init_seconds_saved": self.init_seconds_saved,
+            "namespaces": {
+                ns: {**self._ns(ns), "entries": sizes[ns]}
+                for ns in sizes
+            },
         }
 
     def clear(self) -> None:

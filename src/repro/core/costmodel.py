@@ -18,7 +18,7 @@ EXPERIMENTS.md table derived from this model is labeled *modeled*.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -83,19 +83,26 @@ def step_time(
     return float(np.maximum(t_region, t_inject).max())
 
 
-def plan_time(plan: CommPlan, params: MachineParams) -> float:
-    """Modeled per-iteration time of a plan.
+def stats_time(stats: PlanStats, topo: Topology, params: MachineParams) -> float:
+    """Modeled per-iteration time from plan *stats* alone.
 
     Steps are dependency-ordered (s -> g -> r) except step ``l`` which
     overlaps the global path (the paper starts ``l`` and ``g`` together and
-    waits at the end): total = max(l, s + g + r).
+    waits at the end): total = max(l, s + g + r).  Split out of
+    :func:`plan_time` so trace samples (which carry stats, not full plans)
+    can be scored and fitted with the identical arithmetic.
     """
-    vb = plan.stats.value_bytes
-    by_name = {s.name: step_time(s, plan.topo, params, vb) for s in plan.stats.steps}
+    vb = stats.value_bytes
+    by_name = {s.name: step_time(s, topo, params, vb) for s in stats.steps}
     if set(by_name) == {"p2p"}:
         return by_name["p2p"]
     serial = by_name.get("s", 0.0) + by_name.get("g", 0.0) + by_name.get("r", 0.0)
     return max(by_name.get("l", 0.0), serial)
+
+
+def plan_time(plan: CommPlan, params: MachineParams) -> float:
+    """Modeled per-iteration time of a plan (see :func:`stats_time`)."""
+    return stats_time(plan.stats, plan.topo, params)
 
 
 def init_time(plan: CommPlan, params: MachineParams,
@@ -115,3 +122,209 @@ def init_time(plan: CommPlan, params: MachineParams,
     handshakes = int(st.inter_msgs.max() + st.intra_msgs.max())
     index_sweeps = 2 * plan_time(plan, params) * (4.0 / plan.stats.value_bytes)
     return handshakes * params.alpha_inter * 2 + index_sweeps
+
+
+# ---------------------------------------------------------------------------
+# Fit-from-samples: turn measured exchange timings into a MachineParams.
+#
+# The max-rate model is piecewise linear in
+#   theta = (alpha_intra, 1/beta_intra, alpha_inter, 1/beta_inter,
+#            1/region_injection_bw)
+# with the active piece determined by which process (or which region's
+# injection cap) is the bottleneck of each step.  Fitting therefore
+# alternates (a) selecting each sample's bottleneck rows under the current
+# theta with (b) a nonnegative least-squares solve over the resulting
+# linear features — a majorize-style loop that recovers the generating
+# params exactly when samples were synthesized from this very model (the
+# round-trip property tested in tests/test_profile_calibration.py).
+# ``eager_bytes`` is not a rate and is held fixed at the reference value.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RateSample:
+    """One fitting observation: exact plan traffic + a measured time."""
+
+    stats: PlanStats
+    topo: Topology
+    seconds: float
+    label: str = ""
+
+
+THETA_FIELDS = (
+    "alpha_intra", "inv_beta_intra", "alpha_inter", "inv_beta_inter",
+    "inv_injection_bw",
+)
+
+
+def _theta_of(params: MachineParams) -> np.ndarray:
+    return np.array([
+        params.alpha_intra,
+        1.0 / params.beta_intra,
+        params.alpha_inter,
+        1.0 / params.beta_inter,
+        1.0 / params.region_injection_bw,
+    ])
+
+
+def _params_of(theta: np.ndarray, name: str, ref: MachineParams,
+               excited: np.ndarray) -> MachineParams:
+    """theta -> MachineParams; columns the samples never excited (or that
+    fit to zero rate) fall back to the reference so the result is always a
+    finite, usable parameter set."""
+    t = np.where(excited, theta, _theta_of(ref))
+
+    def inv(x: float, fallback: float) -> float:
+        return 1.0 / x if x > 0 else fallback
+
+    return MachineParams(
+        name=name,
+        alpha_intra=float(max(t[0], 0.0)),
+        beta_intra=inv(float(t[1]), ref.beta_intra),
+        alpha_inter=float(max(t[2], 0.0)),
+        beta_inter=inv(float(t[3]), ref.beta_inter),
+        region_injection_bw=inv(float(t[4]), ref.region_injection_bw),
+        eager_bytes=ref.eager_bytes,  # not a rate: held fixed (see ISSUE 4)
+    )
+
+
+def _nnls(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Lawson-Hanson nonnegative least squares (tiny: n <= 5 here)."""
+    m, n = A.shape
+    x = np.zeros(n)
+    passive = np.zeros(n, dtype=bool)
+    w = A.T @ (b - A @ x)
+    tol = 1e-12 * (float(np.abs(A).sum()) + 1.0)
+    budget = 10 * (n + 1)
+    while budget > 0 and (~passive).any() and \
+            float(np.max(np.where(~passive, w, -np.inf))) > tol:
+        budget -= 1
+        j = int(np.argmax(np.where(~passive, w, -np.inf)))
+        passive[j] = True
+        while True:
+            s = np.zeros(n)
+            s[passive] = np.linalg.lstsq(A[:, passive], b, rcond=None)[0]
+            if not passive.any() or float(s[passive].min()) > tol:
+                break
+            neg = passive & (s <= tol)
+            denom = x[neg] - s[neg]
+            ratios = np.where(denom > 0, x[neg] / np.maximum(denom, 1e-300),
+                              0.0)
+            alpha = float(ratios.min()) if len(ratios) else 0.0
+            x = x + alpha * (s - x)
+            passive &= x > tol
+            budget -= 1
+            if budget <= 0:
+                break
+        x = s
+        w = A.T @ (b - A @ x)
+    return np.maximum(x, 0.0)
+
+
+def _step_feature(step, topo: Topology, value_bytes: int,
+                  theta: np.ndarray) -> np.ndarray:
+    """Bottleneck feature row of one step under ``theta``.
+
+    Candidates are each process's (msgs, bytes) row and each region's
+    injection row — exactly the max() arms of :func:`step_time`."""
+    P = topo.n_procs
+    intra_b = step.intra_vals * value_bytes
+    inter_b = step.inter_vals * value_bytes
+    proc_rows = np.stack([
+        step.intra_msgs, intra_b, step.inter_msgs, inter_b,
+        np.zeros(P),
+    ], axis=1).astype(float)
+    R = topo.n_regions
+    per_region = inter_b.reshape(R, topo.procs_per_region).sum(axis=1)
+    inj_rows = np.zeros((R, 5))
+    inj_rows[:, 4] = per_region
+    rows = np.concatenate([proc_rows, inj_rows], axis=0)
+    return rows[int(np.argmax(rows @ theta))]
+
+
+def _sample_feature(sample: RateSample, theta: np.ndarray) -> np.ndarray:
+    """Feature row of a whole sample: mirrors :func:`stats_time`'s
+    max(l, s + g + r) composition under the current ``theta``."""
+    vb = sample.stats.value_bytes
+    by_name = {
+        s.name: _step_feature(s, sample.topo, vb, theta)
+        for s in sample.stats.steps
+    }
+    if set(by_name) == {"p2p"}:
+        return by_name["p2p"]
+    zero = np.zeros(5)
+    serial = (by_name.get("s", zero) + by_name.get("g", zero)
+              + by_name.get("r", zero))
+    overlap = by_name.get("l", zero)
+    return overlap if overlap @ theta >= serial @ theta else serial
+
+
+def fit_machine_params(
+    samples: Sequence[RateSample],
+    name: str = "fitted",
+    ref: MachineParams = TPU_V5E,
+    max_outer: int = 50,
+    rel_tol: float = 1e-9,
+) -> Tuple[MachineParams, Dict[str, float]]:
+    """Least-squares fit of MachineParams from measured exchange samples.
+
+    Returns ``(params, gof)`` where ``gof`` carries ``residual`` (l2 of
+    seconds), ``rel_rmse`` (rms of per-sample relative error over nonzero
+    samples), ``r2``, ``n_samples``, ``outer_iters`` and ``converged``
+    (1.0/0.0).  ``ref`` seeds the bottleneck selection and backfills any
+    rate the samples do not excite.
+    """
+    samples = [s for s in samples if s.seconds > 0.0]
+    if not samples:
+        raise ValueError("fit_machine_params needs at least one sample "
+                         "with seconds > 0")
+    t = np.array([s.seconds for s in samples])
+    theta = _theta_of(ref)
+    converged = False
+    outer = 0
+    best = (np.inf, theta, np.zeros((len(samples), 5)))
+    stale = 0
+    for outer in range(1, max_outer + 1):
+        F = np.stack([_sample_feature(s, theta) for s in samples])
+        col = np.linalg.norm(F, axis=0)
+        excited = col > 0
+        theta_new = _theta_of(ref).copy()
+        if excited.any():
+            scale = np.where(excited, col, 1.0)
+            theta_new[excited] = (
+                _nnls(F[:, excited] / scale[excited], t) / scale[excited]
+            )
+        denom = np.maximum(np.abs(theta), 1e-300)
+        delta = float(np.max(np.abs(theta_new - theta) / denom))
+        theta = theta_new
+        resid_now = float(np.linalg.norm(F @ theta - t))
+        if resid_now < best[0] * (1.0 - 1e-6) - 1e-300:
+            best = (resid_now, theta.copy(), F.copy())
+            stale = 0
+        else:
+            stale += 1
+        if delta < rel_tol:
+            converged = True
+            break
+        if stale >= 2:
+            # objective plateaued: noisy measurements can cycle between
+            # near-tied bottleneck selections — accept the best iterate
+            converged = True
+            break
+    if np.isfinite(best[0]):
+        theta, F = best[1], best[2]
+    pred = F @ theta
+    resid = pred - t
+    nz = t > 0
+    ss_tot = float(np.sum((t - t.mean()) ** 2))
+    gof = {
+        "residual": float(np.linalg.norm(resid)),
+        "rel_rmse": float(np.sqrt(np.mean((resid[nz] / t[nz]) ** 2))),
+        "r2": (1.0 - float(np.sum(resid ** 2)) / ss_tot) if ss_tot > 0
+        else 1.0,
+        "n_samples": float(len(samples)),
+        "outer_iters": float(outer),
+        "converged": 1.0 if converged else 0.0,
+    }
+    excited = np.linalg.norm(F, axis=0) > 0
+    return _params_of(theta, name, ref, excited), gof

@@ -183,38 +183,27 @@ def make_moe_plan(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=256)
-def _routing_pattern(
-    ep_size: int,
-    e_log: int,
+def _pack_routing(
+    eids: list,
     replicas: int,
     e_per_dev: int,
     capacity: int,
-    top_k: int,
     tokens_per_lane: int,
 ) -> Tuple[CommPattern, DiscoveryStats, str]:
-    """Representative dispatch routing of one batch as a ``CommPattern``.
+    """Per-lane [N, k] logical-expert assignments -> dispatch CommPattern.
 
-    Tokens know their expert; experts do not know their senders — the
-    push-side sparse dynamic data exchange.  Routing is synthesized from a
-    fixed-seed uniform router (the load-balanced steady state the aux loss
-    drives toward), replicated and capacity-packed with exactly the
-    semantics of :func:`route` / :func:`capacity_pack`, then discovered via
-    :meth:`SparseDynamicExchange.push_pattern`: lane ``p`` owns its
-    ``tokens_per_lane`` token values, each kept (token, k) pair pushes that
-    token to the destination device.  A token routed to several experts of
-    one region appears as duplicate global indices — what the ``full``
-    planner dedups.  Deterministic, so the fingerprint is stable across
-    calls and processes: repeated batches and decode steps key the same
-    cache entry.
+    Shared tail of the uniform and the measured-histogram synthesizers:
+    replicate over physical experts, capacity-pack with exactly the
+    semantics of :func:`route` / :func:`capacity_pack` (token-major rank),
+    then discover the pattern via the push-side sparse dynamic data
+    exchange: lane ``p`` owns its ``tokens_per_lane`` token values, each
+    kept (token, k) pair pushes that token to the destination device.
     """
-    e_phys = e_log * replicas
-    N, k = tokens_per_lane, top_k
+    N = tokens_per_lane
     dest: list = []
     local_ids: list = []
-    for p in range(ep_size):
-        rng = np.random.default_rng(p)
-        eid = np.argsort(rng.random((N, e_log)), axis=1)[:, :k]
+    for p, eid in enumerate(eids):
+        k = eid.shape[1]
         rep = (np.arange(N) % replicas)[:, None]
         phys = (eid * replicas + rep).reshape(-1)
         # capacity packing: rank within each physical expert, token-major
@@ -228,9 +217,98 @@ def _routing_pattern(
         dest.append((phys[keep] // e_per_dev).astype(np.int64))
         local_ids.append((np.repeat(np.arange(N), k)[keep]).astype(np.int64))
     pattern, stats = SparseDynamicExchange.push_pattern(
-        dest, local_ids, n_local=[N] * ep_size
+        dest, local_ids, n_local=[N] * len(eids)
     )
     return pattern, stats, pattern_fingerprint(pattern)
+
+
+@functools.lru_cache(maxsize=256)
+def _routing_pattern(
+    ep_size: int,
+    e_log: int,
+    replicas: int,
+    e_per_dev: int,
+    capacity: int,
+    top_k: int,
+    tokens_per_lane: int,
+) -> Tuple[CommPattern, DiscoveryStats, str]:
+    """Representative dispatch routing of one batch as a ``CommPattern``.
+
+    Routing is synthesized from a fixed-seed uniform router (the
+    load-balanced steady state the aux loss drives toward).  A token routed
+    to several experts of one region appears as duplicate global indices —
+    what the ``full`` planner dedups.  Deterministic, so the fingerprint is
+    stable across calls and processes: repeated batches and decode steps
+    key the same cache entry.
+    """
+    N, k = tokens_per_lane, top_k
+    eids = []
+    for p in range(ep_size):
+        rng = np.random.default_rng(p)
+        eids.append(np.argsort(rng.random((N, e_log)), axis=1)[:, :k])
+    return _pack_routing(eids, replicas, e_per_dev, capacity, N)
+
+
+def quantize_histogram(
+    hist, e_log: int, quantum: int = 64
+) -> Tuple[int, ...]:
+    """Normalize an expert histogram to integer counts summing ``quantum``.
+
+    Largest-remainder apportionment, deterministic tie-break on expert
+    index.  Two measured histograms that differ by less than ~1/quantum in
+    every fraction quantize identically — so their synthesized routing
+    patterns share a fingerprint and the adaptive re-planner's cache lookup
+    hits instead of re-planning (the "unchanged histogram re-plans
+    nothing" property asserted in tests).
+    """
+    h = np.asarray(hist, dtype=np.float64).reshape(-1)
+    if len(h) != e_log:
+        raise ValueError(f"histogram has {len(h)} bins, expected {e_log}")
+    total = float(h.sum())
+    frac = (h / total) if total > 0 else np.full(e_log, 1.0 / e_log)
+    raw = frac * quantum
+    base = np.floor(raw).astype(np.int64)
+    short = quantum - int(base.sum())
+    if short > 0:
+        order = np.lexsort((np.arange(e_log), -(raw - base)))
+        base[order[:short]] += 1
+    return tuple(int(x) for x in base)
+
+
+@functools.lru_cache(maxsize=256)
+def _histogram_routing_pattern(
+    ep_size: int,
+    e_log: int,
+    replicas: int,
+    e_per_dev: int,
+    capacity: int,
+    top_k: int,
+    tokens_per_lane: int,
+    qhist: Tuple[int, ...],
+) -> Tuple[CommPattern, DiscoveryStats, str]:
+    """Dispatch CommPattern whose expert marginals match a *measured*
+    histogram (``qhist``: quantized counts from :func:`quantize_histogram`)
+    instead of the synthesized uniform routing — the pattern the adaptive
+    re-planner fingerprints when a serve workload drifts.
+
+    Each token draws ``top_k`` *distinct* experts weighted by the
+    histogram (Gumbel top-k, lane-seeded rng: deterministic across calls
+    and processes) — matching :func:`route`'s semantics, where one token
+    never hits the same logical expert twice, so the dedup planner scores
+    duplicate counts the real workload would actually produce.
+    """
+    N, k = tokens_per_lane, top_k
+    q = np.asarray(qhist, dtype=np.float64)
+    frac = q / max(float(q.sum()), 1.0)
+    # zero-probability experts stay drawable at ~1e-12 so k distinct
+    # experts always exist even for a fully collapsed histogram
+    logp = np.log(np.maximum(frac, 1e-12))
+    eids = []
+    for p in range(ep_size):
+        rng = np.random.default_rng(100_003 + p)
+        g = rng.gumbel(size=(N, e_log))
+        eids.append(np.argsort(-(logp[None, :] + g), axis=1)[:, :k])
+    return _pack_routing(eids, replicas, e_per_dev, capacity, N)
 
 
 def dispatch_pattern(
@@ -254,6 +332,21 @@ def dispatch_topology(plan: MoEPlan) -> Topology:
     return Topology(plan.ep_size, max(1, plan.devs_per_region))
 
 
+def _select_mode_over_pattern(
+    plan: MoEPlan,
+    pattern: CommPattern,
+    value_bytes: int,
+    params: MachineParams = TPU_V5E,
+) -> Tuple[str, SelectionReport]:
+    """Section-5 selection of a transport mode for one routing pattern."""
+    _plan, report = select_plan(
+        pattern, dispatch_topology(plan), params=params,
+        value_bytes=value_bytes,
+        candidates=tuple(MODE_OF_STRATEGY),
+    )
+    return MODE_OF_STRATEGY[report.chosen], report
+
+
 def select_moe_mode(
     plan: MoEPlan,
     tokens_per_lane: int,
@@ -269,12 +362,7 @@ def select_moe_mode(
     strategy choice.
     """
     pattern, _stats, _fp = dispatch_pattern(plan, tokens_per_lane)
-    _plan, report = select_plan(
-        pattern, dispatch_topology(plan), params=params,
-        value_bytes=value_bytes,
-        candidates=tuple(MODE_OF_STRATEGY),
-    )
-    return MODE_OF_STRATEGY[report.chosen], report
+    return _select_mode_over_pattern(plan, pattern, value_bytes, params)
 
 
 def moe_plan_for(
@@ -329,6 +417,65 @@ def moe_plan_for(
         if mode == "auto":
             chosen, _report = select_moe_mode(
                 geom, tokens_per_lane, value_bytes, params
+            )
+        return dataclasses.replace(geom, mode=chosen, fingerprint=fp)
+
+    return cache.moe_plan(key, build)
+
+
+def moe_plan_from_histogram(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    tokens_per_lane: int,
+    hist,
+    mode: str = "auto",
+    quantum: int = 64,
+    ep_over_pods: bool = True,
+    cap_factor: float = 1.25,
+    dedup_factor: Optional[float] = None,
+    params: MachineParams = TPU_V5E,
+    cache=None,
+) -> MoEPlan:
+    """Cached dispatch planning over a *measured* expert histogram — the
+    re-planning entry point of ``repro.profile.adapt.AdaptivePlanner``.
+
+    Mirrors :func:`moe_plan_for` but the routing pattern (and therefore the
+    fingerprint keying the plan cache) is synthesized from ``hist`` — the
+    observed per-expert (token, k)-pair counts of a batch, fed from
+    :func:`moe_dispatch_lane`'s ``expert_counts`` output — instead of the
+    uniform steady-state router.  The histogram is quantized
+    (:func:`quantize_histogram`) before fingerprinting, so re-planning
+    under an effectively unchanged routing distribution is a cache hit
+    that re-plans nothing; a drifted histogram keys (and, for
+    ``mode="auto"``, re-selects) a genuinely new plan.
+    """
+    cache = default_plan_cache() if cache is None else cache
+    geom = make_moe_plan(
+        cfg, mesh, tokens_per_lane,
+        mode=("a2a" if mode == "auto" else mode),
+        ep_over_pods=ep_over_pods, cap_factor=cap_factor,
+        dedup_factor=dedup_factor,
+    )
+    if geom.mode == "dense":
+        return geom
+    qhist = quantize_histogram(hist, geom.e_log, quantum)
+    pattern, _stats, fp = _histogram_routing_pattern(
+        geom.ep_size, geom.e_log, geom.replicas, geom.e_per_dev,
+        geom.capacity, geom.top_k, tokens_per_lane, qhist,
+    )
+    value_bytes = cfg.d_model * np.dtype(cfg.dtype).itemsize
+    mesh_key = (tuple(mesh.axis_names), tuple(np.shape(mesh.devices)))
+    key = (
+        "moe_plan_hist", mesh_key, tokens_per_lane, cfg.n_experts,
+        cfg.top_k, mode, ep_over_pods, cap_factor, dedup_factor,
+        value_bytes, params, fp,
+    )
+
+    def build() -> MoEPlan:
+        chosen = mode
+        if mode == "auto":
+            chosen, _report = _select_mode_over_pattern(
+                geom, pattern, value_bytes, params
             )
         return dataclasses.replace(geom, mode=chosen, fingerprint=fp)
 
@@ -515,8 +662,9 @@ def moe_dispatch_lane(
     plan: MoEPlan,
     cfg: ArchConfig,
     valid: Optional[jnp.ndarray] = None,   # [N] bool; False rows are pads
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (y_lane [N, D], aux scalar, dropped_fraction scalar).
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (y_lane [N, D], aux scalar, dropped_fraction scalar,
+    expert_counts [e_log] f32).
 
     ``dropped_fraction`` is the fraction of this lane's *valid* (token, k)
     pairs that lost their expert slot to capacity overflow (see
@@ -526,13 +674,23 @@ def moe_dispatch_lane(
     they are not real tokens: counting them would distort the fraction
     whenever tokens don't divide the lane count).  An all-pad lane reports
     1.0 — weight lane fractions by their valid-pair count when averaging
-    (as :func:`moe_layer` does)."""
+    (as :func:`moe_layer` does).
+
+    ``expert_counts`` is this lane's measured routing histogram: valid
+    (token, k) pairs per *logical* expert, pre-capacity (drops are a
+    capacity symptom, not a routing signal).  It is the observation the
+    adaptive re-planner consumes (``repro.profile.adapt``) in place of the
+    synthesized uniform routing behind :func:`dispatch_pattern`."""
     N, D = x_lane.shape
     C = plan.capacity
     act_fn = activation(cfg.act)
     if valid is None:
         valid = jnp.ones((N,), bool)
     phys, w, aux = route(x_lane, params["router"], plan)
+    pair_valid = jnp.broadcast_to(valid[:, None], phys.shape)
+    counts = jnp.zeros((plan.e_log,), jnp.float32).at[
+        (phys // plan.replicas).reshape(-1)
+    ].add(pair_valid.reshape(-1).astype(jnp.float32))
 
     if plan.mode == "dense":
         wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
@@ -545,7 +703,8 @@ def moe_dispatch_lane(
         wk = jnp.sum(match * w[None].astype(jnp.float32), axis=-1)
         y = jnp.einsum("en,end->nd", wk, y_all.astype(jnp.float32))
         y = jax.lax.psum(y, "model")
-        return y.astype(x_lane.dtype), aux, jnp.zeros((), jnp.float32)
+        return (y.astype(x_lane.dtype), aux, jnp.zeros((), jnp.float32),
+                counts)
 
     slot, keep, slot_token = capacity_pack(phys, plan)
     w = w * keep.astype(w.dtype)
@@ -581,7 +740,7 @@ def moe_dispatch_lane(
 
     buf = jnp.concatenate([y_recv, jnp.zeros((1, D), y_recv.dtype)], 0)
     y = pack_combine(buf, jnp.minimum(slot, plan.e_phys * C), w)
-    return y.astype(x_lane.dtype), aux, dropped
+    return y.astype(x_lane.dtype), aux, dropped, counts
 
 
 def moe_layer(
@@ -592,16 +751,24 @@ def moe_layer(
     mesh: Mesh,
     batch_axes: Tuple[str, ...],
     cache=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return_expert_counts: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """shard_map wrapper: sequence-shard tokens over 'model' lanes, dispatch,
     all_gather the lane outputs back.  Returns (y [B,S,D], aux scalar,
-    dropped_fraction scalar — mean over lanes, see :func:`capacity_pack`).
+    dropped_fraction scalar — mean over lanes, see :func:`capacity_pack`);
+    with ``return_expert_counts=True`` a fourth output is appended: the
+    batch's measured routing histogram ([e_log] f32, valid (token, k)
+    pairs per logical expert, psum'd over every mesh axis — so replicated
+    lanes multiply the scale uniformly; normalize before comparing).
 
     When ``cache`` (a ``core.cache.PlanCache``) is given, the jitted
-    shard_map dispatch executor is memoized in it keyed on (plan, mesh,
-    specs, param-tree structure): every MoE layer of every forward reuses
-    one compiled transport program per dispatch geometry instead of
-    rebuilding it each call.
+    shard_map dispatch executor is memoized in it keyed on (plan geometry,
+    mesh, specs, param-tree structure): every MoE layer of every forward
+    reuses one compiled transport program per dispatch geometry instead of
+    rebuilding it each call.  The routing *fingerprint* is deliberately
+    excluded from that key — the compiled transport depends only on
+    geometry + mode, so an adaptively re-selected plan that lands back on
+    a previously compiled mode recompiles nothing.
     """
     from ..compat import shard_map
 
@@ -637,10 +804,13 @@ def moe_layer(
             n_all = b_loc * S
             xf = xb.reshape(n_all, D)
             if plan.mode == "dense":
-                y, aux, drop = moe_dispatch_lane(xf, pb, plan, cfg)
-                return (y.reshape(b_loc, S, D),
-                        jax.lax.pmean(aux, all_axes),
-                        jax.lax.pmean(drop, all_axes))
+                y, aux, drop, counts = moe_dispatch_lane(xf, pb, plan, cfg)
+                out = (y.reshape(b_loc, S, D),
+                       jax.lax.pmean(aux, all_axes),
+                       jax.lax.pmean(drop, all_axes))
+                if return_expert_counts:
+                    out += (jax.lax.psum(counts, all_axes),)
+                return out
             n_pad = n_all + ((-n_all) % Pm)
             if n_pad != n_all:
                 xf = jnp.pad(xf, ((0, n_pad - n_all), (0, 0)))
@@ -651,31 +821,39 @@ def moe_layer(
             # the capacity-health metric; lane fractions are averaged
             # weighted by their real-pair counts
             valid = m * n_lane + jnp.arange(n_lane) < n_all
-            y_lane, aux, drop = moe_dispatch_lane(x_lane, pb, plan, cfg,
-                                                  valid=valid)
+            y_lane, aux, drop, counts = moe_dispatch_lane(
+                x_lane, pb, plan, cfg, valid=valid
+            )
             y = jax.lax.all_gather(y_lane, "model", axis=0, tiled=True)
             y = y[:n_all].reshape(b_loc, S, D)
             nv = jnp.sum(valid.astype(jnp.float32))
             drop = jax.lax.psum(drop * nv, all_axes) / jnp.maximum(
                 jax.lax.psum(nv, all_axes), 1.0
             )
-            return y, jax.lax.pmean(aux, all_axes), drop
+            out = (y, jax.lax.pmean(aux, all_axes), drop)
+            if return_expert_counts:
+                out += (jax.lax.psum(counts, all_axes),)
+            return out
 
+        n_out = 4 if return_expert_counts else 3
         return jax.jit(shard_map(
             body,
             mesh=mesh,
             in_specs=(x_spec,) + tuple(spec_flat),
-            out_specs=(x_spec, P(), P()),
+            out_specs=(x_spec,) + (P(),) * (n_out - 1),
             check_vma=False,
         ))
 
     if cache is not None:
-        key = ("moe_exec", plan, mesh, x_spec, ptree, cfg.act)
+        # fingerprint-stripped: the compiled transport depends on geometry
+        # + mode only, so adaptive re-plans reuse compiled executors
+        geom_key = dataclasses.replace(plan, fingerprint="")
+        key = ("moe_exec", geom_key, mesh, x_spec, ptree, cfg.act,
+               return_expert_counts)
         fn = cache.moe_executor(key, build)
     else:
         fn = build()
-    y, aux, dropped = fn(x, *pflat)
-    return y, aux, dropped
+    return fn(x, *pflat)
 
 
 def _dedup_outbound(x_lane, slot, keep, phys, params, plan, act_fn):

@@ -94,32 +94,48 @@ def _decode_attn(p_l, x, cur, cfg, window, cache):
 # ---------------------------------------------------------------------------
 
 
+def moe_tokens_per_lane(model: Model, n_tokens: int) -> int:
+    """Per-lane token count a forward of ``n_tokens`` global tokens
+    dispatches — the single shape-derivation site shared by `_moe_ffn`,
+    ``serve.engine``'s pre-warm and the adaptive re-planner, so the three
+    can never key different plan-cache entries for one workload."""
+    axes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    lanes = axes["model"]
+    n_dev = max(1, int(np.prod([axes[a] for a in model.batch_axes])))
+    return max(1, n_tokens // n_dev // lanes)
+
+
 def moe_plan_for_model(model: Model, n_tokens: int, cache=None):
     """The dispatch plan a ``model`` forward uses for ``n_tokens`` global
-    tokens — the single key-derivation site, shared between `_moe_ffn`
-    and ``serve.engine``'s pre-warm so the two can never drift apart.
+    tokens — see :func:`moe_tokens_per_lane` for the shared shape key.
 
     Cached planning: every decode step (n_tokens=B) and every prefill of
     an equal prompt length key the same plan-cache entry — steady-state
     serving re-plans nothing."""
-    axes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
-    lanes = axes["model"]
-    n_dev = max(1, int(np.prod([axes[a] for a in model.batch_axes])))
     return moe_plan_for(
-        model.cfg, model.mesh, max(1, n_tokens // n_dev // lanes),
+        model.cfg, model.mesh, moe_tokens_per_lane(model, n_tokens),
         mode=model.moe_mode, ep_over_pods=model.ep_over_pods,
         cap_factor=model.moe_cap_factor, cache=cache,
     )
 
 
-def _moe_ffn(model: Model, p_l, h, n_tokens):
+def _moe_ffn(model: Model, p_l, h, n_tokens, moe_plan=None, collect=False):
+    """One MoE FFN sublayer.  ``moe_plan`` overrides the cached per-shape
+    plan (the adaptive serving path pins a re-selected plan); with
+    ``collect=True`` returns (y, expert_counts, dropped) so the decode
+    loop can feed measured routing histograms to the re-planner."""
     cfg = model.cfg
-    plan = moe_plan_for_model(model, n_tokens)
-    y, _, _ = moe_layer(h, p_l["moe"], plan, cfg, model.mesh,
-                        model.batch_axes, cache=default_plan_cache())
+    plan = moe_plan if moe_plan is not None \
+        else moe_plan_for_model(model, n_tokens)
+    out = moe_layer(h, p_l["moe"], plan, cfg, model.mesh,
+                    model.batch_axes, cache=default_plan_cache(),
+                    return_expert_counts=collect)
+    y = out[0]
     if cfg.n_shared_experts:
         y = y + mlp({"w_" + k[3:]: v for k, v in p_l["moe"].items()
                      if k.startswith("ws_")}, h, cfg.act)
+    if collect:
+        return y, out[3], out[2]
     return y
 
 
@@ -257,16 +273,25 @@ def _prefill_encdec(model: Model, params, inputs, max_len):
 
 
 def decode_step(model: Model, params: Dict, inputs: Dict,
-                caches: Tuple, cur_len) -> Tuple[jnp.ndarray, Tuple]:
+                caches: Tuple, cur_len, moe_plan=None,
+                return_moe_stats: bool = False):
     """One-token step. ``inputs``: {"tokens": [B,1]} or {"embeds": [B,1,d]}.
     ``cur_len``: number of tokens already in the caches (traced scalar ok).
-    Returns (logits [B, V], new caches)."""
+    Returns (logits [B, V], new caches); with ``return_moe_stats=True``
+    (moe family) additionally a stats dict: ``expert_counts`` — the step's
+    measured routing histogram summed over MoE layers ([e_log] f32, the
+    adaptive re-planner's observation) — and ``dropped`` (mean capacity
+    drop fraction over MoE layers).  ``moe_plan`` pins a dispatch plan
+    (adaptive serving) instead of the per-shape cached lookup."""
     cfg = model.cfg
     cur = jnp.asarray(cur_len, jnp.int32)
     x = model._embed_in(params, inputs)
     B = x.shape[0]
     new_caches = []
     ci = 0
+    moe_counts = None
+    moe_drop = jnp.zeros((), jnp.float32)
+    n_moe = 0
 
     def nxt():
         nonlocal ci
@@ -318,7 +343,16 @@ def decode_step(model: Model, params: Dict, inputs: Dict,
                                     nxt())
             x = x + a
             h = rms_norm(x, p_l["ln2"])
-            x = x + _moe_ffn(model, p_l, h, B)
+            if return_moe_stats:
+                y, counts, drop = _moe_ffn(model, p_l, h, B,
+                                           moe_plan=moe_plan, collect=True)
+                moe_counts = counts if moe_counts is None \
+                    else moe_counts + counts
+                moe_drop = moe_drop + drop
+                n_moe += 1
+            else:
+                y = _moe_ffn(model, p_l, h, B, moe_plan=moe_plan)
+            x = x + y
             new_caches.append(c)
     elif cfg.family == "ssm":
         for i in range(cfg.n_layers):
@@ -364,4 +398,12 @@ def decode_step(model: Model, params: Dict, inputs: Dict,
             new_caches.append({**cc, "cross_k": c["cross_k"],
                                "cross_v": c["cross_v"]})
     logits = model._logits(params, rms_norm(x, params["final_norm"]))
+    if return_moe_stats:
+        if moe_counts is None:
+            moe_counts = jnp.zeros((max(1, cfg.n_experts),), jnp.float32)
+        stats = {
+            "expert_counts": moe_counts,
+            "dropped": moe_drop / max(1, n_moe),
+        }
+        return logits[:, 0], tuple(new_caches), stats
     return logits[:, 0], tuple(new_caches)

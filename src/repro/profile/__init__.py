@@ -1,0 +1,35 @@
+"""Measured-rate profiling, cost-model calibration, adaptive re-planning.
+
+The repo's first feedback loop from execution back into planning (MPI
+Advance's thesis that portable communication optimization must *observe*
+the actual machine, arXiv 2309.07337):
+
+* :mod:`.trace` — :class:`TraceRecorder`: per-pattern timing/bytes/round
+  samples keyed by the same fingerprints ``core.cache.PlanCache`` uses,
+  with JSON export/import (hooks in ``amg.distributed`` and the measured
+  benchmark paths).
+* :mod:`.calibrate` — :func:`fit_trace`: least-squares fit of
+  ``MachineParams`` from a trace (the numeric core lives in
+  ``core.costmodel.fit_machine_params``), goodness-of-fit reporting,
+  round-trip synthesis, and shipped-vs-fitted selection comparison.
+* :mod:`.adapt` — :class:`AdaptivePlanner`: measured expert-histogram
+  drift detection + MoE re-fingerprinting/re-selection, wired into
+  ``serve.engine.ServeEngine(adaptive=True)``.
+"""
+from .trace import ExchangeSample, HistogramSample, StepSample, TraceRecorder
+from .calibrate import (
+    CalibrationResult,
+    fit_trace,
+    probe_plans,
+    rate_probe_patterns,
+    selection_flips,
+    synthesize_trace,
+)
+from .adapt import AdaptivePlanner, ReplanEvent
+
+__all__ = [
+    "ExchangeSample", "HistogramSample", "StepSample", "TraceRecorder",
+    "CalibrationResult", "fit_trace", "probe_plans", "rate_probe_patterns",
+    "selection_flips", "synthesize_trace",
+    "AdaptivePlanner", "ReplanEvent",
+]

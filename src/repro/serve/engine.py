@@ -26,6 +26,7 @@ import numpy as np
 
 from ..core import default_plan_cache
 from ..models import Model, serving
+from ..profile.adapt import AdaptivePlanner, ReplanEvent
 
 
 @dataclasses.dataclass
@@ -39,7 +40,9 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, adaptive: bool = False,
+                 drift_threshold: float = 0.3, drift_warmup: int = 2,
+                 tracer=None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -49,9 +52,6 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, i: serving.prefill(model, p, i, max_len=max_len)
         )
-        self._decode = jax.jit(
-            lambda p, i, c, n: serving.decode_step(model, p, i, c, n)
-        )
         self.caches = None
         self.cur_len = 0
         self._next_tok = np.zeros((batch_slots, 1), np.int32)
@@ -59,15 +59,70 @@ class ServeEngine:
         # decode token count is static (one token per slot), so the MoE
         # dispatch plan is built once here and every decode step hits it
         self.plan_cache = default_plan_cache()
+        self.moe_plan = None
+        self.planner: Optional[AdaptivePlanner] = None
+        self.adaptive = adaptive and model.cfg.family == "moe"
         if model.cfg.family == "moe":
-            self._warm_moe_plan()
+            self.moe_plan = self._warm_moe_plan()
+        if self.adaptive:
+            self.planner = AdaptivePlanner(
+                cfg=model.cfg,
+                mesh=model.mesh,
+                tokens_per_lane=serving.moe_tokens_per_lane(model, self.B),
+                plan=self.moe_plan,
+                threshold=drift_threshold,
+                warmup=drift_warmup,
+                # honor a user-pinned transport: re-plans re-fingerprint
+                # under the measured histogram but keep the pinned mode;
+                # only moe_mode="auto" lets drift migrate the transport
+                mode=model.moe_mode,
+                ep_over_pods=model.ep_over_pods,
+                cap_factor=model.moe_cap_factor,
+                cache=self.plan_cache,
+                tracer=tracer,
+            )
+        # decode executables keyed per plan geometry (fingerprint
+        # stripped): an adaptive re-selection that lands on an
+        # already-compiled geometry+mode swaps a dict entry — the
+        # non-dispatch graph is not recompiled
+        self._decode_fns: Dict[object, Callable] = {}
+        self._decode = self._decode_for(self.moe_plan)
 
-    def _warm_moe_plan(self) -> None:
+    def _warm_moe_plan(self):
         """Pre-plan the decode-step MoE dispatch through the same helper
         `_moe_ffn` keys with (n_tokens = batch_slots), so even the first
         decode step re-plans nothing."""
-        serving.moe_plan_for_model(self.model, self.B,
-                                   cache=self.plan_cache)
+        return serving.moe_plan_for_model(self.model, self.B,
+                                          cache=self.plan_cache)
+
+    def _decode_for(self, plan) -> Callable:
+        """Decode executable for a dispatch plan, memoized by the
+        fingerprint-stripped plan geometry (the compiled program depends
+        on geometry + mode, never on the routing fingerprint — the same
+        key discipline as ``moe_layer``'s executor cache, so a future
+        geometry-changing re-plan correctly recompiles)."""
+        model = self.model
+        key = (dataclasses.replace(plan, fingerprint="")
+               if (self.adaptive and plan is not None) else None)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            if key is None:
+                fn = jax.jit(
+                    lambda p, i, c, n: serving.decode_step(model, p, i, c, n)
+                )
+            else:
+                fn = jax.jit(
+                    lambda p, i, c, n, _plan=plan: serving.decode_step(
+                        model, p, i, c, n, moe_plan=_plan,
+                        return_moe_stats=True,
+                    )
+                )
+            self._decode_fns[key] = fn
+        return fn
+
+    @property
+    def replan_events(self) -> List[ReplanEvent]:
+        return self.planner.events if self.planner is not None else []
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -119,10 +174,15 @@ class ServeEngine:
             return finished
         for i in active:
             self.slots[i].generated.append(int(self._next_tok[i, 0]))
-        logits, self.caches = self._decode(
+        out = self._decode(
             self.params, {"tokens": jnp.asarray(self._next_tok)},
             self.caches, jnp.asarray(self.cur_len, jnp.int32),
         )
+        if self.adaptive:
+            logits, self.caches, moe_stats = out
+            self._observe_moe(moe_stats)
+        else:
+            logits, self.caches = out
         self.cur_len += 1
         self._next_tok = np.asarray(
             jnp.argmax(logits, axis=-1), np.int32
@@ -135,6 +195,20 @@ class ServeEngine:
                 finished.append(s)
                 self.slots[i] = None
         return finished
+
+    def _observe_moe(self, moe_stats) -> Optional[ReplanEvent]:
+        """Feed one decode step's measured routing histogram to the
+        adaptive planner; on a drift re-selection, swap the decode
+        executable for the new plan's mode (compiled programs are reused
+        per mode — migration does not recompile the non-dispatch graph
+        for modes already seen)."""
+        event = self.planner.observe(
+            np.asarray(moe_stats["expert_counts"], dtype=np.float64)
+        )
+        if event is not None:
+            self.moe_plan = self.planner.plan
+            self._decode = self._decode_for(self.moe_plan)
+        return event
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []

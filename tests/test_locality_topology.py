@@ -1,0 +1,121 @@
+"""Region/class assignment on non-power-of-two and asymmetric topologies.
+
+The cost model reshapes per-proc arrays to (n_regions, procs_per_region);
+the planners classify message locality with ``Topology.same_region``.  The
+two must agree on every shape — 6 = 3x2, 12 = 3x4, 6 = 2x3, ... — or the
+modeled times describe a different machine than the plans.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommPattern,
+    LASSEN,
+    StepStats,
+    Topology,
+    build_plan,
+    plan_time,
+)
+from repro.core.costmodel import step_time
+
+SHAPES = [(6, 2), (6, 3), (12, 4), (12, 3), (10, 5), (14, 7)]
+
+
+def ring_pattern(topo: Topology, n_per: int = 5) -> CommPattern:
+    """Every proc needs one value of its successor and of the proc two
+    regions ahead — a mix of intra- and inter-region edges on any shape."""
+    P = topo.n_procs
+    offsets = np.arange(P + 1) * n_per
+    needs = []
+    for q in range(P):
+        peers = [(q + 1) % P, (q + 2 * topo.procs_per_region) % P]
+        needs.append(np.array(sorted(p * n_per for p in set(peers) - {q}),
+                              dtype=np.int64))
+    return CommPattern.from_block_partition(needs, offsets)
+
+
+@pytest.mark.parametrize("n_procs,ppr", SHAPES)
+def test_region_assignment_consistent_with_cost_model_reshape(n_procs, ppr):
+    """Topology.region/local_rank agree with the (R, ppr) reshape the
+    max-rate model applies to per-proc traffic arrays."""
+    topo = Topology(n_procs, ppr)
+    procs = np.arange(n_procs)
+    grid = procs.reshape(topo.n_regions, ppr)
+    for r in range(topo.n_regions):
+        for lr in range(ppr):
+            p = int(grid[r, lr])
+            assert topo.region(p) == r
+            assert topo.local_rank(p) == lr
+            assert list(topo.procs_in_region(r)) == grid[r].tolist()
+    for p in range(n_procs):
+        for q in range(n_procs):
+            assert topo.same_region(p, q) == (p // ppr == q // ppr)
+
+
+@pytest.mark.parametrize("n_procs,ppr", SHAPES)
+def test_step_stats_locality_classification(n_procs, ppr):
+    """StepStats intra/inter split matches Topology.same_region per message
+    on asymmetric shapes (the quantities behind every modeled row)."""
+    topo = Topology(n_procs, ppr)
+    pattern = ring_pattern(topo)
+    plan = build_plan(pattern, topo, "standard")
+    (step,) = plan.steps
+    ss = StepStats.from_messages("p2p", step.messages, topo)
+    exp_im = np.zeros(n_procs, dtype=np.int64)
+    exp_xm = np.zeros(n_procs, dtype=np.int64)
+    exp_iv = np.zeros(n_procs, dtype=np.int64)
+    exp_xv = np.zeros(n_procs, dtype=np.int64)
+    for m in step.messages:
+        if m.src == m.dst or m.size == 0:
+            continue
+        if topo.same_region(m.src, m.dst):
+            exp_im[m.src] += 1
+            exp_iv[m.src] += m.size
+        else:
+            exp_xm[m.src] += 1
+            exp_xv[m.src] += m.size
+    np.testing.assert_array_equal(ss.intra_msgs, exp_im)
+    np.testing.assert_array_equal(ss.inter_msgs, exp_xm)
+    np.testing.assert_array_equal(ss.intra_vals, exp_iv)
+    np.testing.assert_array_equal(ss.inter_vals, exp_xv)
+    # total conservation: every ghost is delivered exactly once
+    assert int((ss.intra_vals + ss.inter_vals).sum()) == \
+        pattern.total_ghosts()
+
+
+@pytest.mark.parametrize("n_procs,ppr", SHAPES)
+@pytest.mark.parametrize("strategy", ["standard", "partial", "full"])
+def test_plans_correct_and_aggregation_localizes(n_procs, ppr, strategy):
+    """Every strategy delivers the right ghosts on asymmetric shapes, the
+    aggregated wire step crosses regions only, and the cost model scores
+    the plan without reshape errors."""
+    topo = Topology(n_procs, ppr)
+    pattern = ring_pattern(topo)
+    plan = build_plan(pattern, topo, strategy)
+    vals = [100.0 * p + np.arange(5, dtype=np.float64)
+            for p in range(n_procs)]
+    ghosts = plan.execute_numpy(vals)
+    for q in range(n_procs):
+        for slot, g in enumerate(pattern.needs[q]):
+            owner = int(pattern.owner_proc[g])
+            oslot = int(pattern.owner_slot[g])
+            assert ghosts[q][slot] == vals[owner][oslot]
+    by_name = {s.name: s for s in plan.steps}
+    if strategy != "standard":
+        for m in by_name["g"].messages:          # wire step: inter only
+            assert not topo.same_region(m.src, m.dst)
+        for name in ("l", "s", "r"):             # local steps: intra only
+            for m in by_name[name].messages:
+                assert topo.same_region(m.src, m.dst)
+    # cost model handles the (R, ppr) reshape on this shape
+    t = plan_time(plan, LASSEN)
+    assert np.isfinite(t) and t > 0
+    for ss in plan.stats.steps:
+        assert np.isfinite(step_time(ss, topo, LASSEN, 8))
+
+
+def test_indivisible_region_size_rejected():
+    with pytest.raises(ValueError):
+        Topology(6, 4)
+    with pytest.raises(ValueError):
+        Topology(10, 4)

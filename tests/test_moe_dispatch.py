@@ -193,8 +193,8 @@ def test_dropped_fraction_excludes_padding_rows():
 
     def body(xl):
         valid = jnp.arange(16) < 12
-        _y, _aux, drop = moe_dispatch_lane(xl, params, plan, cfg,
-                                           valid=valid)
+        _y, _aux, drop, _counts = moe_dispatch_lane(xl, params, plan, cfg,
+                                                    valid=valid)
         return drop
 
     drop = shard_map(body, mesh=mesh, in_specs=(P(None, None),),

@@ -92,3 +92,53 @@ def test_executor_cache_reuses_bound_fn():
 
 def test_default_cache_is_process_wide():
     assert default_plan_cache() is default_plan_cache()
+
+
+def test_stats_breaks_out_namespaces():
+    topo = Topology(8, 4)
+    cache = PlanCache()
+    cache.collective(make_pattern(seed=1), topo, "standard")
+    cache.collective(make_pattern(seed=1), topo, "standard")   # hit
+    cache.moe_plan(("k1",), lambda: "plan")
+    cache.moe_plan(("k1",), lambda: "plan")                    # hit
+    cache.moe_plan(("k2",), lambda: "plan2")
+    s = cache.stats()
+    assert s["namespaces"]["collective"] == \
+        {"hits": 1, "misses": 1, "entries": 1}
+    assert s["namespaces"]["moe_plan"] == \
+        {"hits": 1, "misses": 2, "entries": 2}
+    assert s["namespaces"]["executor"]["entries"] == 0
+    assert s["entries"] == 3
+    assert s["evictions"] == 0
+    # legacy flat counters still aggregate across surfaces
+    assert (s["hits"], s["misses"]) == (2, 3)
+
+
+def test_lru_eviction_is_bounded_and_counted():
+    topo = Topology(8, 4)
+    cache = PlanCache(max_entries=3)
+    for seed in range(5):
+        cache.collective(make_pattern(seed=seed), topo, "standard")
+    s = cache.stats()
+    assert s["namespaces"]["collective"]["entries"] == 3
+    assert s["evictions"] == 2
+    # seeds 2..4 survive (LRU order); seed 0 was evicted -> re-plans
+    m = cache.misses
+    cache.collective(make_pattern(seed=4), topo, "standard")
+    assert cache.misses == m                      # most recent: hit
+    cache.collective(make_pattern(seed=0), topo, "standard")
+    assert cache.misses == m + 1                  # evicted: miss again
+
+
+def test_lru_hit_refreshes_recency():
+    topo = Topology(8, 4)
+    cache = PlanCache(max_entries=2)
+    cache.collective(make_pattern(seed=0), topo, "standard")
+    cache.collective(make_pattern(seed=1), topo, "standard")
+    cache.collective(make_pattern(seed=0), topo, "standard")   # refresh 0
+    cache.collective(make_pattern(seed=2), topo, "standard")   # evicts 1
+    m = cache.misses
+    cache.collective(make_pattern(seed=0), topo, "standard")
+    assert cache.misses == m                      # 0 survived
+    cache.collective(make_pattern(seed=1), topo, "standard")
+    assert cache.misses == m + 1                  # 1 was the LRU victim

@@ -1,0 +1,206 @@
+"""Measured-rate profiling + calibration (repro.profile.trace/calibrate).
+
+The load-bearing property is the round trip: traces synthesized *from* the
+cost model under a known MachineParams must fit back to that params set —
+only then can selection driven by fitted rates be trusted to mean what the
+modeled selection means.
+"""
+import numpy as np
+import pytest
+
+from repro.core import LASSEN, MachineParams, Topology, build_plan, plan_time
+from repro.core.costmodel import fit_machine_params
+from repro.profile import (
+    TraceRecorder,
+    fit_trace,
+    probe_plans,
+    rate_probe_patterns,
+    selection_flips,
+    synthesize_trace,
+)
+
+RATE_FIELDS = ("alpha_intra", "beta_intra", "alpha_inter", "beta_inter",
+               "region_injection_bw")
+
+TRUE = MachineParams(
+    name="truth",
+    alpha_intra=3.0e-7,
+    beta_intra=45.0e9,
+    alpha_inter=4.0e-6,
+    beta_inter=7.0e9,
+    region_injection_bw=10.0e9,
+)
+
+
+def test_round_trip_fit_recovers_generating_params():
+    """Synthesized trace (seconds = plan_time under TRUE) -> fit -> TRUE,
+    every rate within tolerance, starting from different shipped params."""
+    topo = Topology(8, 4)
+    plans = probe_plans(topo, strategies=("standard", "full"), n_per=16384)
+    trace = synthesize_trace(plans, TRUE)
+    result = fit_trace(trace, ref=LASSEN)
+    assert result.converged
+    for f in RATE_FIELDS:
+        a, b = getattr(TRUE, f), getattr(result.params, f)
+        assert abs(b - a) / a < 1e-6, (f, a, b)
+    # eager cutoff is not a rate: held fixed at the reference value
+    assert result.params.eager_bytes == LASSEN.eager_bytes
+    assert result.gof["rel_rmse"] < 1e-9
+    assert result.gof["r2"] > 1.0 - 1e-9
+
+
+def test_probe_patterns_excite_every_rate():
+    """Each probe's bottleneck is the rate it is named for: perturbing that
+    rate (and only that rate) changes the probe's modeled time."""
+    topo = Topology(8, 4)
+    probes = dict(rate_probe_patterns(topo, n_per=16384))
+    assert set(probes) == {"intra_latency", "intra_band", "inter_latency",
+                           "inter_band", "injection"}
+    sensitive = {
+        "intra_latency": "alpha_intra",
+        "intra_band": "beta_intra",
+        "inter_latency": "alpha_inter",
+        "inter_band": "beta_inter",
+        "injection": "region_injection_bw",
+    }
+    for label, pattern in probes.items():
+        plan = build_plan(pattern, topo, "standard")
+        base = plan_time(plan, TRUE)
+        field = sensitive[label]
+        bumped = MachineParams(**{
+            **{f: getattr(TRUE, f) for f in RATE_FIELDS},
+            "name": "bumped", field: getattr(TRUE, field) * (
+                2.0 if field.startswith("alpha") else 0.5),
+        })
+        assert plan_time(plan, bumped) > base * 1.5, label
+
+
+def test_fit_requires_nonzero_samples():
+    with pytest.raises(ValueError):
+        fit_machine_params([])
+
+
+def test_unexcited_rates_fall_back_to_reference():
+    """A trace with only intra traffic cannot identify inter rates; the
+    fit must backfill them from the reference instead of inventing them."""
+    topo = Topology(4, 4)  # one region: no inter traffic exists
+    plans = probe_plans(topo, strategies=("standard",), n_per=4096)
+    trace = synthesize_trace(plans, TRUE)
+    result = fit_trace(trace, ref=LASSEN)
+    assert result.converged
+    assert result.params.alpha_inter == LASSEN.alpha_inter
+    assert result.params.beta_inter == LASSEN.beta_inter
+    assert result.params.region_injection_bw == LASSEN.region_injection_bw
+    for f in ("alpha_intra", "beta_intra"):
+        a, b = getattr(TRUE, f), getattr(result.params, f)
+        assert abs(b - a) / a < 1e-6, (f, a, b)
+
+
+def test_trace_json_round_trip(tmp_path):
+    """save -> load preserves every sample; a refit over the loaded trace
+    equals the original fit."""
+    topo = Topology(8, 4)
+    plans = probe_plans(topo, strategies=("standard",), n_per=16384)
+    trace = synthesize_trace(plans, TRUE)
+    trace.record_histogram("moe/observed", [3.0, 1.0, 0.0, 4.0], step=7)
+    path = tmp_path / "trace.json"
+    trace.save(path)
+    loaded = TraceRecorder.load(path)
+    assert loaded.summary() == trace.summary()
+    assert loaded.histograms[0].counts == [3.0, 1.0, 0.0, 4.0]
+    assert loaded.histograms[0].step == 7
+    r1 = fit_trace(trace, ref=LASSEN)
+    r2 = fit_trace(loaded, ref=LASSEN)
+    for f in RATE_FIELDS:
+        assert getattr(r1.params, f) == pytest.approx(
+            getattr(r2.params, f), rel=1e-12)
+
+
+def test_merged_rate_samples_median_and_purity():
+    topo = Topology(8, 4)
+    plan = probe_plans(topo, strategies=("standard",), n_per=64)[0]
+    tr = TraceRecorder()
+    for secs in (1.0, 3.0, 100.0):
+        tr.record_plan(plan, secs, label="x")
+    tr.record_plan(plan, 123.0, label="moe", pure_exchange=False)
+    merged = tr.merged_rate_samples()
+    assert len(merged) == 1
+    assert merged[0].seconds == 3.0            # median, impure excluded
+    assert len(tr.merged_rate_samples(pure_only=False)) == 2
+
+
+def test_wrap_executor_records_samples():
+    import jax
+
+    from repro.core import (
+        CommPattern,
+        PlanCache,
+        Topology as T,
+        pattern_fingerprint,
+    )
+
+    n_dev = jax.device_count()
+    offsets = np.arange(n_dev + 1) * 4
+    needs = [np.arange(min(2, n_dev * 4)) for _ in range(n_dev)]
+    pat = CommPattern.from_block_partition(needs, offsets)
+    topo = T(n_dev, 1)
+    cache = PlanCache()
+    mesh = jax.make_mesh((n_dev,), ("proc",))
+    coll = cache.collective(pat, topo, "standard")
+    fn = cache.executor(pat, topo, mesh, "proc", "standard")
+    tr = TraceRecorder()
+    timed = tr.wrap_executor(coll.plan, fn, label="exec")
+    x = np.zeros((n_dev, 4, 1))
+    timed(x)
+    timed(x)
+    assert len(tr.samples) == 2
+    assert all(s.seconds > 0 for s in tr.samples)
+    assert tr.samples[0].fingerprint == pattern_fingerprint(pat)
+    assert tr.samples[0].label == "exec"
+
+
+def test_selection_flips_reports_side_by_side():
+    """Fan-out pattern (proc 0 sends a distinct value to every proc of the
+    remote region): slow inter latency (LASSEN) favors aggregation — one
+    wire message instead of ppr — while a machine whose measured inter
+    latency is near the intra latency favors standard.  The shipped vs
+    fitted comparison must report that flip."""
+    from repro.core import CommPattern
+
+    topo = Topology(8, 4)
+    offsets = np.arange(topo.n_procs + 1) * 8
+    needs = [np.empty(0, dtype=np.int64) for _ in range(topo.n_procs)]
+    for lr in range(topo.procs_per_region):
+        needs[topo.procs_per_region + lr] = np.array([lr], dtype=np.int64)
+    pattern = CommPattern.from_block_partition(needs, offsets)
+    fast_inter = MachineParams(
+        name="fast-inter", alpha_intra=LASSEN.alpha_intra,
+        beta_intra=LASSEN.beta_intra, alpha_inter=LASSEN.alpha_intra,
+        beta_inter=LASSEN.beta_inter,
+        region_injection_bw=LASSEN.region_injection_bw,
+    )
+    rows = selection_flips([("fanout", pattern)], topo, LASSEN, fast_inter)
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["shipped"] != "standard"     # aggregation wins on LASSEN
+    assert row["fitted"] == "standard"      # cheap inter: direct wins
+    assert row["flip"] == "yes"
+    # no flip when both parameter sets agree
+    same = selection_flips([("fanout", pattern)], topo, LASSEN, LASSEN)
+    assert same[0]["flip"] == "no"
+
+
+def test_calibration_result_table_and_json(tmp_path):
+    topo = Topology(8, 4)
+    plans = probe_plans(topo, strategies=("standard",), n_per=16384)
+    result = fit_trace(synthesize_trace(plans, TRUE), ref=LASSEN)
+    table = result.table()
+    assert "alpha_inter" in table and "converged=True" in table
+    path = tmp_path / "fitted.json"
+    result.save(path)
+    import json
+
+    payload = json.loads(path.read_text())
+    assert payload["fitted"]["name"].startswith("fitted")
+    assert payload["shipped"]["name"] == LASSEN.name
+    assert np.isfinite(payload["gof"]["rel_rmse"])
