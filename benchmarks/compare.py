@@ -1,0 +1,239 @@
+"""Perf-regression gate: diff a benchmark results JSON against a baseline.
+
+CI's ``bench-smoke`` job runs the smoke harness, then::
+
+    python -m benchmarks.compare benchmarks/results/baseline.json \
+        benchmarks/results/smoke.json --diff-out .../compare_diff.json
+
+Row policy, driven by the ``kind=`` tag each row carries:
+
+* DETERMINISTIC rows (``modeled-*``, ``exact-plan``, ``dryrun-roofline``,
+  ``skip``) are exact arithmetic on plan/block geometry: ``us_per_call``
+  and every numeric ``key=value`` field of ``derived`` must match the
+  baseline within ``--modeled-rtol`` (non-numeric fields — strategy and
+  kernel-variant choices — must match exactly).  A drift here means the
+  model, a plan, or a selection changed: exactly the regression this gate
+  exists to catch.
+* MEASURED rows (``measured-*``) are wall-clock on whatever machine CI
+  gives us: they must exist and be finite, and nonzero timings must stay
+  within a generous ``--measured-band`` factor of the baseline.
+* Rows present in the baseline but missing from the run FAIL (a silently
+  dropped benchmark is a regression); new rows only warn — commit a
+  regenerated baseline to adopt them.
+
+Schema versions must match exactly: a schema bump requires a regenerated
+baseline, not a tolerance.
+
+Exit codes: 0 OK, 1 regression, 2 unusable input (schema/IO).  The diff is
+always written to ``--diff-out`` (when given) so CI can upload it as an
+artifact either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+_DETERMINISTIC_EXACT = frozenset({"exact-plan", "dryrun-roofline", "skip"})
+
+
+def is_deterministic(kind: str) -> bool:
+    """modeled-* rows (any machine model) and exact plan/dry-run rows are
+    pure arithmetic; everything measured-* is wall-clock."""
+    return kind.startswith("modeled") or kind in _DETERMINISTIC_EXACT
+
+
+def parse_derived(derived: str) -> Tuple[str, Dict[str, str]]:
+    """``kind=X|a=1|b=c`` -> ("X", {"a": "1", "b": "c"}); bare tokens get
+    themselves as value."""
+    kind = ""
+    fields: Dict[str, str] = {}
+    for tok in derived.split("|"):
+        if not tok:
+            continue
+        key, _, val = tok.partition("=")
+        if key == "kind":
+            kind = val
+        else:
+            fields[key] = val if _ else key
+    return kind, fields
+
+
+def _as_float(s: str):
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def _rel_close(a: float, b: float, rtol: float, atol: float = 1e-9) -> bool:
+    return abs(a - b) <= max(rtol * max(abs(a), abs(b)), atol)
+
+
+def load_results(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "results" not in payload or "schema_version" not in payload:
+        raise ValueError(f"{path}: not a benchmark results JSON")
+    return payload
+
+
+def index_rows(payload: dict) -> Dict[str, List[dict]]:
+    idx: Dict[str, List[dict]] = {}
+    for row in payload["results"]:
+        idx.setdefault(row["name"], []).append(row)
+    return idx
+
+
+def compare_row(base: dict, new: dict, modeled_rtol: float,
+                measured_band: float) -> List[dict]:
+    """Regression records (empty if the row is fine)."""
+    name = base["name"]
+    kind, bfields = parse_derived(base["derived"])
+    nkind, nfields = parse_derived(new["derived"])
+    regs = []
+    if kind != nkind:
+        regs.append({
+            "name": name, "what": "kind-changed",
+            "baseline": kind, "new": nkind,
+        })
+        return regs
+    b_us, n_us = float(base["us_per_call"]), float(new["us_per_call"])
+    if not math.isfinite(n_us):
+        regs.append({"name": name, "what": "non-finite", "new": n_us})
+        return regs
+
+    if is_deterministic(kind):
+        if not _rel_close(b_us, n_us, modeled_rtol):
+            regs.append({
+                "name": name, "what": "modeled-us-drift",
+                "baseline": b_us, "new": n_us, "rtol": modeled_rtol,
+            })
+        for key in sorted(set(bfields) | set(nfields)):
+            if key.startswith("measured"):
+                # wall-clock side-channel inside a deterministic row
+                # (convention: measured* fields are informational)
+                continue
+            bv, nv = bfields.get(key), nfields.get(key)
+            if bv is None or nv is None:
+                regs.append({
+                    "name": name, "what": "derived-field-missing",
+                    "field": key, "baseline": bv, "new": nv,
+                })
+                continue
+            bf, nf = _as_float(bv), _as_float(nv)
+            if bf is not None and nf is not None:
+                if not _rel_close(bf, nf, modeled_rtol, atol=1e-6):
+                    regs.append({
+                        "name": name, "what": "derived-field-drift",
+                        "field": key, "baseline": bv, "new": nv,
+                    })
+            elif bv != nv:
+                regs.append({
+                    "name": name, "what": "derived-field-changed",
+                    "field": key, "baseline": bv, "new": nv,
+                })
+    else:  # measured: generous band, only when both sides actually timed
+        if b_us > 0.0 and n_us > 0.0:
+            ratio = n_us / b_us
+            if ratio > measured_band or ratio < 1.0 / measured_band:
+                regs.append({
+                    "name": name, "what": "measured-out-of-band",
+                    "baseline": b_us, "new": n_us,
+                    "ratio": ratio, "band": measured_band,
+                })
+    return regs
+
+
+def compare(baseline: dict, new: dict, modeled_rtol: float = 1e-6,
+            measured_band: float = 25.0) -> dict:
+    """Full diff; ``status`` is "ok" or "regression"."""
+    regressions: List[dict] = []
+    if baseline["schema_version"] != new["schema_version"]:
+        return {
+            "status": "regression",
+            "regressions": [{
+                "name": "<schema>", "what": "schema-version-mismatch",
+                "baseline": baseline["schema_version"],
+                "new": new["schema_version"],
+            }],
+            "new_rows": [], "checked": 0,
+        }
+    if new.get("failed_sections"):
+        regressions.append({
+            "name": "<sections>", "what": "failed-sections",
+            "new": new["failed_sections"],
+        })
+    bidx, nidx = index_rows(baseline), index_rows(new)
+    checked = 0
+    for name, brows in bidx.items():
+        nrows = nidx.get(name)
+        if not nrows:
+            regressions.append({"name": name, "what": "missing-row"})
+            continue
+        if len(nrows) != len(brows):
+            regressions.append({
+                "name": name, "what": "row-count-changed",
+                "baseline": len(brows), "new": len(nrows),
+            })
+            continue
+        for b, n in zip(brows, nrows):
+            checked += 1
+            regressions.extend(
+                compare_row(b, n, modeled_rtol, measured_band)
+            )
+    new_rows = sorted(set(nidx) - set(bidx))
+    return {
+        "status": "regression" if regressions else "ok",
+        "regressions": regressions,
+        "new_rows": new_rows,
+        "checked": checked,
+        "baseline_sha": baseline.get("git_sha"),
+        "new_sha": new.get("git_sha"),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=pathlib.Path)
+    ap.add_argument("new", type=pathlib.Path)
+    ap.add_argument("--modeled-rtol", type=float, default=1e-6,
+                    help="relative tolerance for deterministic rows")
+    ap.add_argument("--measured-band", type=float, default=25.0,
+                    help="allowed slow/fast factor for measured rows")
+    ap.add_argument("--diff-out", type=pathlib.Path, default=None,
+                    help="write the diff JSON here (for the CI artifact)")
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_results(args.baseline)
+        new = load_results(args.new)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare: unusable input: {e}", file=sys.stderr)
+        return 2
+
+    diff = compare(baseline, new, args.modeled_rtol, args.measured_band)
+    if args.diff_out:
+        args.diff_out.parent.mkdir(parents=True, exist_ok=True)
+        args.diff_out.write_text(json.dumps(diff, indent=2))
+
+    print(f"compare: {diff['checked']} rows checked against "
+          f"{args.baseline} (baseline sha {diff.get('baseline_sha')})")
+    for r in diff["new_rows"]:
+        print(f"  NEW (not gated): {r}")
+    for r in diff["regressions"]:
+        print(f"  REGRESSION: {json.dumps(r)}")
+    if diff["status"] != "ok":
+        print(f"compare: FAIL — {len(diff['regressions'])} regression(s); "
+              "if intentional, regenerate and commit "
+              "benchmarks/results/baseline.json", file=sys.stderr)
+        return 1
+    print("compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

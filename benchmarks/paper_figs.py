@@ -76,7 +76,7 @@ def fig7_crossover(rows=FULL_ROWS, n_procs=2048) -> List[Row]:
             f"fig7/init_plus_iter/{s}",
             periter[s] * 1e6,
             f"kind=modeled-lassen|init_us={inits[s] * 1e6:.0f}"
-            f"|host_planning_s={walls[s]:.2f}{cross}",
+            f"|measured_planning_s={walls[s]:.2f}{cross}",
         ))
     return out
 

@@ -1,4 +1,5 @@
-"""Aggregate dry-run cell JSONs into the roofline table (EXPERIMENTS.md)."""
+"""Aggregate dry-run cell JSONs into the roofline table (EXPERIMENTS.md),
+plus a modeled SpMV kernel-variant roofline (flat vs column-blocked)."""
 from __future__ import annotations
 
 import glob
@@ -7,6 +8,81 @@ import os
 from typing import Dict, List
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+# TPU v5e single-core numbers for the kernel roofline (modeled, like the
+# dry-run cells: labeled, never presented as measurements)
+V5E_HBM_BW = 819e9          # B/s
+V5E_VPU_FLOPS = 1.97e12 / 4  # f32 VPU share; SpMV never touches the MXU
+
+
+def spmv_kernel_cells(
+    rows_per_proc: int = 2 ** 21,
+    k: int = 9,
+    ghost: int = 2 * 4096,
+    value_bytes: int = 8,
+    block_rows: int = 256,
+    block_cols: int = 512,
+) -> List[Dict]:
+    """Modeled roofline of both SpMV variants on a paper-scale fine level.
+
+    Flat reads x once (VMEM-resident — only legal when it fits); blocked
+    re-streams each x column block once per row block, trading HBM traffic
+    for a VMEM footprint independent of the x length.  Deterministic
+    arithmetic — gated by ``benchmarks.compare``.
+    """
+    from repro.sparse.device import (
+        spmv_blocked_vmem_bytes,
+        spmv_flat_vmem_bytes,
+    )
+
+    n = rows_per_proc
+    x_len = n + ghost
+    flops = 2.0 * n * k
+    ell_bytes = n * k * (4 + value_bytes)
+    cells = []
+    for variant in ("flat", "blocked"):
+        if variant == "flat":
+            x_bytes = x_len * value_bytes
+            vmem = spmv_flat_vmem_bytes(
+                in_pad=n, ghost_pad=ghost, k_local=k, k_ghost=k,
+                value_bytes=value_bytes, rows=n, block_rows=block_rows,
+            )
+        else:
+            # x re-streamed once per row block (the cost of column blocking)
+            x_bytes = (n // block_rows) * (
+                -(-x_len // block_cols) * block_cols
+            ) * value_bytes
+            vmem = spmv_blocked_vmem_bytes(
+                bucket_k=k, value_bytes=value_bytes, rows=n,
+                block_rows=block_rows, block_cols=block_cols,
+            )
+        hbm = ell_bytes + x_bytes + n * value_bytes
+        t = max(hbm / V5E_HBM_BW, flops / V5E_VPU_FLOPS)
+        cells.append({
+            "variant": variant,
+            "hbm_bytes": hbm,
+            "flops": flops,
+            "intensity": flops / hbm,
+            "time_s": t,
+            "vmem_bytes": vmem,
+            "vmem_fits": vmem <= 16 * 2 ** 20,
+        })
+    return cells
+
+
+def kernel_rows():
+    out = []
+    for c in spmv_kernel_cells():
+        out.append((
+            f"roofline/spmv_{c['variant']}",
+            c["time_s"] * 1e6,
+            "kind=modeled-roofline"
+            f"|hbm_gb={c['hbm_bytes'] / 1e9:.3f}"
+            f"|intensity={c['intensity']:.4f}"
+            f"|vmem_kib={c['vmem_bytes'] / 2 ** 10:.1f}"
+            f"|vmem_fits={c['vmem_fits']}",
+        ))
+    return out
 
 
 def load_cells(include_variants: bool = True) -> List[Dict]:
@@ -25,7 +101,7 @@ def load_cells(include_variants: bool = True) -> List[Dict]:
 
 
 def rows():
-    out = []
+    out = kernel_rows()
     for c in load_cells():
         tag = f"{c.get('arch')}/{c.get('shape')}/{c.get('mesh')}"
         if c.get("_variant"):

@@ -109,6 +109,15 @@ def measured_setup_exchange_rows(rows: int, tracer=None):
     return out
 
 
+def spmv_kernel_rows(rows: int, n_procs: int):
+    """Flat vs column-blocked SpMV kernel: deterministic modeled-VMEM
+    selection rows (per level + paper-scale fine level) and measured
+    CPU-reference / Pallas-interpret timings with equivalence asserted."""
+    from .spmv_kernel import measured_rows, selection_rows
+
+    return selection_rows(rows, n_procs) + measured_rows(rows)
+
+
 def moe_comm_rows(smoke: bool, tracer=None):
     """MoE dispatch exchange: modeled per-mode comparison on a paper-scale
     EP group plus MEASURED jitted dispatch (all transports + auto) on the
@@ -276,6 +285,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
             ("amg", lambda: paper_figs.amg_solver_convergence(rows)),
             ("setup_exchange",
              lambda: setup_exchange_modeled(rows, SMOKE_PROCS)),
+            ("spmv_kernel", lambda: spmv_kernel_rows(rows, SMOKE_PROCS)),
             ("measured_exchange",
              lambda: measured_exchange_rows(rows, tracer)),
             ("measured_setup_exchange",
@@ -294,6 +304,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
         ("fig13", lambda: paper_figs.fig13_weak_scaling()),
         ("amg", paper_figs.amg_solver_convergence),
         ("setup_exchange", lambda: setup_exchange_modeled(rows, 256)),
+        ("spmv_kernel", lambda: spmv_kernel_rows(rows, 256)),
         ("measured_exchange",
          lambda: measured_exchange_rows(rows, tracer)),
         ("measured_setup_exchange",

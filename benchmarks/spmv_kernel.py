@@ -1,0 +1,181 @@
+"""Flat vs column-blocked SpMV kernel benchmark rows.
+
+Two row families, matching the repo's modeled/measured labeling:
+
+* :func:`selection_rows` — DETERMINISTIC modeled-VMEM footprints and the
+  resulting flat-vs-blocked choice, per AMG level of the benchmark problem
+  plus a paper-scale synthetic fine level (per-device x far beyond VMEM)
+  that must come out ``blocked``.  These rows are exact arithmetic on block
+  geometry (no timing) and are gated tightly by ``benchmarks.compare``.
+
+* :func:`measured_rows` — MEASURED wall-clock of both kernel variants on
+  this host: the jnp reference path (CPU backend) on the benchmark fine
+  level, and the real Pallas kernels in interpret mode on a small problem.
+  Before timing, both variants are asserted equivalent to the host matvec —
+  the benchmark doubles as an equivalence gate in CI smoke.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.amg import diffusion_2d
+from repro.sparse import (
+    default_spmv_vmem_limit,
+    partition_csr,
+    partitioned_to_ell,
+    partitioned_to_ell_blocked,
+    select_spmv_kernel,
+    spmv_blocked_vmem_bytes,
+    spmv_flat_vmem_bytes,
+)
+
+from .amg_comm import VALUE_BYTES, hierarchy_for
+
+#: Paper-scale synthetic fine level: ~2M unknowns per device (the scale at
+#: which the paper's BoomerAMG fine levels run), 9-point stencil, a
+#: two-cell-deep halo — per-device x alone is ~17 MB, past any VMEM tier.
+PAPER_ROWS_PER_PROC = 2 ** 21
+PAPER_K = 9
+PAPER_GHOST = 2 * 4096
+
+
+def _kib(b: int) -> str:
+    return f"{b / 2 ** 10:.1f}"
+
+
+def selection_rows(rows: int, n_procs: int):
+    """Modeled footprint + variant choice per level and at paper scale."""
+    out = []
+    h = hierarchy_for(rows)
+    for k, lvl in enumerate(h.levels):
+        if lvl.A.nrows < n_procs:
+            break
+        part = partition_csr(lvl.A, n_procs)
+        sel = select_spmv_kernel(part, value_bytes=VALUE_BYTES)
+        out.append((
+            f"spmv_kernel/select/L{k}", 0.0,
+            f"kind=modeled-vmem|flat_kib={_kib(sel.flat_bytes)}"
+            f"|blocked_kib={_kib(sel.blocked_bytes)}"
+            f"|limit_kib={_kib(sel.limit_bytes)}|variant={sel.variant}",
+        ))
+    # paper-scale fine level from analytic geometry (the matrix itself is
+    # never materialized): x footprint alone exceeds the threshold, so the
+    # selector must fall over to the column-blocked kernel
+    limit = default_spmv_vmem_limit()
+    flat = spmv_flat_vmem_bytes(
+        in_pad=PAPER_ROWS_PER_PROC, ghost_pad=PAPER_GHOST,
+        k_local=PAPER_K, k_ghost=PAPER_K, value_bytes=VALUE_BYTES,
+        rows=PAPER_ROWS_PER_PROC,
+    )
+    blocked = spmv_blocked_vmem_bytes(
+        bucket_k=PAPER_K, value_bytes=VALUE_BYTES, rows=PAPER_ROWS_PER_PROC,
+    )
+    variant = "flat" if flat <= limit else "blocked"
+    assert variant == "blocked", (flat, limit)  # paper scale MUST block
+    out.append((
+        "spmv_kernel/select/paper_fine", 0.0,
+        f"kind=modeled-vmem|rows_per_proc={PAPER_ROWS_PER_PROC}"
+        f"|flat_kib={_kib(flat)}|blocked_kib={_kib(blocked)}"
+        f"|limit_kib={_kib(limit)}|variant={variant}",
+    ))
+    return out
+
+
+def _time_fn(fn, x, iters: int, warmup: int) -> float:
+    for _ in range(warmup):
+        np.asarray(fn(x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        np.asarray(fn(x))
+    return (time.perf_counter() - t0) / iters
+
+
+def _single_proc_layouts(A, block_cols: int):
+    """Both device layouts of an unpartitioned operator (1-proc partition:
+    no ghosts, so the kernels are exercised in isolation)."""
+    part = partition_csr(A, 1)
+    return partitioned_to_ell(part), partitioned_to_ell_blocked(
+        part, block_cols=block_cols
+    )
+
+
+def _check_and_time(A, block_cols: int, backend_name: str,
+                    iters: int, warmup: int):
+    """Assert flat == blocked == host matvec, then time both variants."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import use_backend
+    from repro.kernels.spmv_ell.ops import spmv, spmv_blocked
+
+    ell, bell = _single_proc_layouts(A, block_cols)
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=A.ncols)
+    want = A.matvec(x)
+
+    xf = jnp.asarray(np.concatenate([x, [0.0]]))        # flat sentinel slot
+    xb = np.zeros(bell.x_len)
+    xb[: A.ncols] = x
+    xb = jnp.asarray(xb)
+    lc = jnp.asarray(ell.local_cols[0])
+    lv = jnp.asarray(ell.local_vals[0])
+    bc_ = jnp.asarray(bell.cols[0])
+    bv = jnp.asarray(bell.vals[0])
+
+    with use_backend(backend_name):
+        flat_fn = jax.jit(lambda v: spmv(lc, lv, v))
+        blocked_fn = jax.jit(
+            lambda v: spmv_blocked(bc_, bv, v, bell.block_cols)
+        )
+        got_flat = np.asarray(flat_fn(xf))[: A.nrows]
+        got_blocked = np.asarray(blocked_fn(xb))[: A.nrows]
+        np.testing.assert_allclose(got_flat, want, rtol=1e-6, atol=1e-8)
+        np.testing.assert_allclose(got_blocked, got_flat,
+                                   rtol=1e-6, atol=1e-8)
+        t_flat = _time_fn(flat_fn, xf, iters, warmup)
+        t_blocked = _time_fn(blocked_fn, xb, iters, warmup)
+    return t_flat, t_blocked, bell
+
+
+def measured_rows(rows: int):
+    """Measured flat/blocked timings: jnp reference path on the benchmark
+    fine level, Pallas interpret mode on a small problem."""
+    import jax
+
+    # equivalence checks compare against the f64 host matvec
+    jax.config.update("jax_enable_x64", True)
+    out = []
+    # -- CPU reference path on the fine level ------------------------------
+    A = hierarchy_for(min(rows, 65_536)).levels[0].A
+    t_flat, t_blocked, bell = _check_and_time(
+        A, block_cols=512, backend_name="reference", iters=10, warmup=2
+    )
+    geom = (f"rows={A.nrows}|buckets={bell.n_buckets}"
+            f"|bucket_k={bell.K}")
+    out.append((
+        "spmv_kernel/measured/flat_ref", t_flat * 1e6,
+        f"kind=measured-host|backend=reference|{geom}",
+    ))
+    out.append((
+        "spmv_kernel/measured/blocked_ref", t_blocked * 1e6,
+        f"kind=measured-host|backend=reference|{geom}"
+        f"|vs_flat={t_blocked / max(t_flat, 1e-12):.2f}x",
+    ))
+    # -- Pallas kernels in interpret mode (small: interpret is python) -----
+    As = diffusion_2d(16, 16)
+    t_flat, t_blocked, bell = _check_and_time(
+        As, block_cols=64, backend_name="pallas_interpret",
+        iters=2, warmup=1,
+    )
+    geom = f"rows={As.nrows}|buckets={bell.n_buckets}|bucket_k={bell.K}"
+    out.append((
+        "spmv_kernel/measured/flat_interpret", t_flat * 1e6,
+        f"kind=measured-host|backend=pallas_interpret|{geom}",
+    ))
+    out.append((
+        "spmv_kernel/measured/blocked_interpret", t_blocked * 1e6,
+        f"kind=measured-host|backend=pallas_interpret|{geom}",
+    ))
+    return out

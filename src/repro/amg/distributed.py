@@ -36,10 +36,14 @@ from ..core.neighborhood import NeighborAlltoallV
 from ..core.plan import Topology
 from ..core.selection import SelectionReport
 from ..sparse.device import (
+    DEFAULT_BLOCK_COLS,
     DeviceEll,
+    DeviceEllBlocked,
+    KernelSelection,
     make_distributed_spmv,
     pack_vector,
-    partitioned_to_ell,
+    partitioned_to_device,
+    select_spmv_kernel,
     unpack_vector,
 )
 from ..sparse.partition import (
@@ -58,11 +62,16 @@ from .hierarchy import Hierarchy, inv_diag
 
 @dataclass
 class DistOp:
-    """One partitioned operator + its persistent collective + device form."""
+    """One partitioned operator + its persistent collective + device form.
+
+    ``kernel`` records the flat-vs-blocked SpMV choice next to the plan's
+    Section-5 transport choice, so both selections travel with the operator.
+    """
 
     part: PartitionedCSR
     coll: NeighborAlltoallV
-    ell: DeviceEll
+    ell: "DeviceEll | DeviceEllBlocked"
+    kernel: Optional[KernelSelection] = None
 
     @property
     def strategy(self) -> str:
@@ -71,6 +80,10 @@ class DistOp:
     @property
     def selection(self) -> Optional[SelectionReport]:
         return self.coll.selection
+
+    @property
+    def kernel_variant(self) -> str:
+        return self.kernel.variant if self.kernel else "flat"
 
 
 @dataclass
@@ -106,6 +119,8 @@ class DistributedHierarchy:
         strategy: str,
         params: MachineParams,
         value_bytes: int,
+        spmv_variant: str = "auto",
+        spmv_vmem_limit: Optional[int] = None,
     ):
         self.levels = levels
         self.mesh = mesh
@@ -118,6 +133,9 @@ class DistributedHierarchy:
         self.strategy = strategy
         self.params = params
         self.value_bytes = value_bytes
+        # the flat-vs-blocked kernel policy the hierarchy was built under
+        self.spmv_variant = spmv_variant
+        self.spmv_vmem_limit = spmv_vmem_limit
         # populated by setup_partitioned: the distributed-setup record
         # (per-level blocks + exchange accounting), None for host lowering
         self.setup_info: Optional[DistributedSetup] = None
@@ -136,11 +154,19 @@ class DistributedHierarchy:
         value_bytes: int = 8,
         cache: Optional[PlanCache] = None,
         dtype=np.float64,
+        spmv_variant: str = "auto",
+        spmv_vmem_limit: Optional[int] = None,
+        spmv_block_cols: int = DEFAULT_BLOCK_COLS,
     ) -> "DistributedHierarchy":
         """Partition every level and init its collectives once (persistent).
 
         ``strategy="auto"`` runs the paper's Section-5 selector per level
         and per transfer operator; pass a concrete strategy to pin it.
+        ``spmv_variant="auto"`` likewise selects the flat or column-blocked
+        SpMV kernel per operator from its modeled VMEM footprint against
+        ``spmv_vmem_limit`` (default: :func:`~repro.sparse.device.
+        default_spmv_vmem_limit`, env-overridable); ``"flat"``/``"blocked"``
+        pin it.  The choice is recorded on each :class:`DistOp`.
         """
         n_procs = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name])
         topo = Topology(
@@ -153,7 +179,13 @@ class DistributedHierarchy:
             coll = cache.collective(
                 part.pattern, topo, strategy, value_bytes, params
             )
-            return DistOp(part, coll, partitioned_to_ell(part, dtype))
+            sel = select_spmv_kernel(
+                part, variant=spmv_variant,
+                vmem_limit_bytes=spmv_vmem_limit,
+                value_bytes=value_bytes, block_cols=spmv_block_cols,
+            )
+            ell = partitioned_to_device(part, sel, dtype, spmv_block_cols)
+            return DistOp(part, coll, ell, sel)
 
         offs = [block_offsets(lvl.A.nrows, n_procs) for lvl in h.levels]
         levels: List[DistributedLevel] = []
@@ -174,7 +206,9 @@ class DistributedHierarchy:
                 dl.P = make_op(lvl.P, offs[k], offs[k + 1])
             levels.append(dl)
         return cls(levels, mesh, axis_name, topo, cache, dtype,
-                   strategy, params, value_bytes)
+                   strategy, params, value_bytes,
+                   spmv_variant=spmv_variant,
+                   spmv_vmem_limit=spmv_vmem_limit)
 
     @classmethod
     def setup_partitioned(
@@ -193,6 +227,9 @@ class DistributedHierarchy:
         min_coarse: int = 64,
         strength_theta: float = 0.25,
         seed: int = 0,
+        spmv_variant: str = "auto",
+        spmv_vmem_limit: Optional[int] = None,
+        spmv_block_cols: int = DEFAULT_BLOCK_COLS,
     ) -> "DistributedHierarchy":
         """End-to-end distributed build: partitioned fine matrix -> solve.
 
@@ -222,7 +259,13 @@ class DistributedHierarchy:
             coll = cache.collective(
                 part.pattern, topo, strategy, value_bytes, params
             )
-            return DistOp(part, coll, partitioned_to_ell(part, dtype))
+            sel = select_spmv_kernel(
+                part, variant=spmv_variant,
+                vmem_limit_bytes=spmv_vmem_limit,
+                value_bytes=value_bytes, block_cols=spmv_block_cols,
+            )
+            ell = partitioned_to_device(part, sel, dtype, spmv_block_cols)
+            return DistOp(part, coll, ell, sel)
 
         levels: List[DistributedLevel] = []
         for k, sl in enumerate(setup.levels):
@@ -242,7 +285,9 @@ class DistributedHierarchy:
                 dl.P = make_op(sl.P_blocks, sl.row_offsets, sl.coarse_offsets)
             levels.append(dl)
         dh = cls(levels, mesh, axis_name, topo, cache, dtype,
-                 strategy, params, value_bytes)
+                 strategy, params, value_bytes,
+                 spmv_variant=spmv_variant,
+                 spmv_vmem_limit=spmv_vmem_limit)
         dh.setup_info = setup
         return dh
 
@@ -361,6 +406,19 @@ class DistributedHierarchy:
                 rows.append((lv.index, name, op.strategy, rep))
         return rows
 
+    def kernel_table(self) -> List[Tuple[int, str, str, Optional[str]]]:
+        """[(level, op, kernel variant, selection report)] — the flat-vs-
+        blocked SpMV choice per operator, mirroring :meth:`selection_table`
+        for the transport choice."""
+        rows = []
+        for lv in self.levels:
+            for name, op in (("A", lv.A), ("R", lv.R), ("P", lv.P)):
+                if op is None:
+                    continue
+                rep = str(op.kernel) if op.kernel else None
+                rows.append((lv.index, name, op.kernel_variant, rep))
+        return rows
+
     def describe(self) -> str:
         lines = [
             f"Distributed AMG: {len(self.levels)} levels on "
@@ -371,7 +429,8 @@ class DistributedHierarchy:
             t = lv.A.coll.plan.stats.totals()
             lines.append(
                 f"  L{lv.index}: n={lv.n:>8,d} pad={lv.pad:>6d} "
-                f"A={lv.A.strategy:8s} inter_msgs={t['inter_msgs']:5d} "
+                f"A={lv.A.strategy:8s} kern={lv.A.kernel_variant:7s} "
+                f"inter_msgs={t['inter_msgs']:5d} "
                 f"inter_bytes={t['inter_bytes']:8d}"
                 + (f" R={lv.R.strategy} P={lv.P.strategy}" if lv.R else "")
             )

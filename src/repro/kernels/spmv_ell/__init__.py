@@ -1,4 +1,9 @@
-from .ops import csr_to_ell, spmv
-from .ref import spmv_ell_ref
+from .ops import csr_to_ell, spmv, spmv_blocked
+from .ref import spmv_ell_blocked_ref, spmv_ell_ref
+from .spmv_ell import DEFAULT_BLOCK_COLS, DEFAULT_BLOCK_ROWS
 
-__all__ = ["csr_to_ell", "spmv", "spmv_ell_ref"]
+__all__ = [
+    "csr_to_ell", "spmv", "spmv_blocked",
+    "spmv_ell_ref", "spmv_ell_blocked_ref",
+    "DEFAULT_BLOCK_COLS", "DEFAULT_BLOCK_ROWS",
+]

@@ -1,4 +1,4 @@
-"""Public ELL SpMV op: CSR->ELL conversion, padding, backend dispatch."""
+"""Public ELL SpMV ops: CSR->ELL conversion, padding, backend dispatch."""
 from __future__ import annotations
 
 from typing import Tuple
@@ -7,8 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import backend
-from .ref import spmv_ell_ref
-from .spmv_ell import DEFAULT_BLOCK_ROWS, spmv_ell
+from .ref import spmv_ell_blocked_ref, spmv_ell_ref
+from .spmv_ell import (
+    DEFAULT_BLOCK_COLS,
+    DEFAULT_BLOCK_ROWS,
+    spmv_ell,
+    spmv_ell_blocked,
+)
 
 
 def csr_to_ell(
@@ -30,16 +35,37 @@ def csr_to_ell(
 
 
 def spmv(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Flat ELL SpMV: whole x VMEM-resident (kernel pads the row count)."""
     mode = backend()
     if mode == "reference":
         return spmv_ell_ref(cols, vals, x)
-    R = cols.shape[0]
-    br = DEFAULT_BLOCK_ROWS
-    while R % br and br > 8:
-        br //= 2
-    if R % br:
-        br = R
-    return spmv_ell(
-        cols, vals, x, block_rows=br,
+    return spmv_ell(cols, vals, x, interpret=(mode == "pallas_interpret"))
+
+
+def spmv_blocked(
+    cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> jnp.ndarray:
+    """Column-blocked ELL SpMV over the bucketed [R, C*K] layout.
+
+    ``x`` must be bucket-padded (length a multiple of ``block_cols``, as
+    produced by the bucketed packing) — validated here so the reference
+    and Pallas backends reject malformed input identically.
+    """
+    if x.shape[0] % block_cols:
+        raise ValueError(
+            f"x length {x.shape[0]} not a multiple of block_cols "
+            f"{block_cols}: pack with partitioned_to_ell_blocked"
+        )
+    if cols.shape[1] % (x.shape[0] // block_cols):
+        raise ValueError(
+            f"cols width {cols.shape[1]} not divisible by the "
+            f"{x.shape[0] // block_cols} x buckets"
+        )
+    mode = backend()
+    if mode == "reference":
+        return spmv_ell_blocked_ref(cols, vals, x, block_cols)
+    return spmv_ell_blocked(
+        cols, vals, x, block_cols=block_cols,
         interpret=(mode == "pallas_interpret"),
     )

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for ELL SpMV."""
+"""Pure-jnp oracles for ELL SpMV (flat and column-blocked layouts)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,3 +7,22 @@ import jax.numpy as jnp
 def spmv_ell_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray):
     """cols/vals: [R, K]; x: [N] -> y [R]."""
     return jnp.sum(vals * x[cols], axis=1)
+
+
+def spmv_ell_blocked_ref(
+    cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, block_cols: int
+):
+    """Column-bucketed layout: cols/vals [R, C*K] with bucket ``j`` in
+    columns [j*K, (j+1)*K) holding in-bucket indices into
+    x[j*block_cols:(j+1)*block_cols]; x: [C*block_cols] -> y [R].
+
+    Same arithmetic as the blocked Pallas kernel, expressed as one flat
+    gather with the bucket base added back.
+    """
+    C = x.shape[0] // int(block_cols)
+    K = cols.shape[1] // C
+    base = jnp.repeat(
+        jnp.arange(C, dtype=cols.dtype) * jnp.asarray(block_cols, cols.dtype),
+        K,
+    )
+    return jnp.sum(vals * x[cols + base[None, :]], axis=1)

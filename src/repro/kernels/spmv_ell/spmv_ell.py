@@ -1,21 +1,32 @@
-"""Local SpMV in ELL (padded-CSR) form as a Pallas TPU kernel.
+"""Local SpMV in ELL (padded-CSR) form as Pallas TPU kernels.
 
 This is the per-device compute of the paper's workload: after the halo
 exchange delivers ghost values, each device multiplies its local sparse
 block.  CSR's ragged rows are hostile to the VPU's lane layout, so rows are
 padded to a uniform K nonzeros (ELL): ``cols``/``vals`` are [R, K] with
-padding entries pointing at a zero slot.  The x vector lives fully in VMEM
-(per-device local + ghost vectors are small: <= a few hundred KB), rows are
-tiled over the grid, and the inner product is a VMEM dynamic gather +
-multiply + row reduction.
+padding entries pointing at a zero slot.  Two execution paths:
 
-For matrices whose x exceeds VMEM the production path is a column-blocked
-variant (same kernel, x BlockSpec column-tiled, accumulating over a second
-grid dim) — the AMG levels used here never need it.
+* :func:`spmv_ell` — the flat kernel: the whole x vector lives in VMEM,
+  rows are tiled over a 1-D grid, and the inner product is a VMEM dynamic
+  gather + multiply + row reduction.  Right whenever the per-device local +
+  ghost vector fits comfortably in VMEM (coarse AMG levels, small blocks).
+
+* :func:`spmv_ell_blocked` — the production path for levels whose x exceeds
+  VMEM (paper-scale fine levels): x is column-tiled over a second grid
+  dimension, each grid step gathers only its ``block_cols``-wide x slice,
+  and the row block's output accumulates across the column steps (the
+  second grid dim is ``arbitrary``/sequential, the row dim stays parallel).
+  The matching column-bucketed packing lives in
+  ``repro.sparse.device.partitioned_to_ell_blocked``: each row's nonzeros
+  are reordered into per-column-block buckets (in-bucket column indices),
+  so ``cols``/``vals`` are [R, C*K] with bucket ``j`` occupying columns
+  [j*K, (j+1)*K) and referencing only x[j*bc:(j+1)*bc).
+
+Row counts need not divide ``block_rows``: the trailing row block is padded
+(col 0 / val 0 — the product is exactly zero) and the padding rows are
+sliced off the output.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +36,22 @@ from jax.experimental.pallas import tpu as pltpu  # noqa: F401
 from ...compat import pallas_tpu_compiler_params
 
 DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_COLS = 512
+
+
+def _pad_rows(cols: jnp.ndarray, vals: jnp.ndarray, block_rows: int):
+    """Pad the trailing row block; padding rows gather x[0] * 0.0 == 0."""
+    R = cols.shape[0]
+    br = min(block_rows, R)
+    pad = (-R) % br
+    if pad:
+        cols = jnp.concatenate(
+            [cols, jnp.zeros((pad, cols.shape[1]), cols.dtype)]
+        )
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((pad, vals.shape[1]), vals.dtype)]
+        )
+    return cols, vals, br
 
 
 def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
@@ -43,22 +70,81 @@ def spmv_ell(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    R, K = cols.shape
+    R = cols.shape[0]
     N = x.shape[0]
-    br = min(block_rows, R)
-    assert R % br == 0, (R, br)
+    cols, vals, br = _pad_rows(cols, vals, block_rows)
+    Rp, K = cols.shape
     return pl.pallas_call(
         _spmv_kernel,
-        grid=(R // br,),
+        grid=(Rp // br,),
         in_specs=[
             pl.BlockSpec((br, K), lambda i: (i, 0)),
             pl.BlockSpec((br, K), lambda i: (i, 0)),
             pl.BlockSpec((N, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, 1), vals.dtype),
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), vals.dtype),
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-    )(cols, vals, x[:, None])[:, 0]
+    )(cols, vals, x[:, None])[:R, 0]
+
+
+def _spmv_blocked_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+    cols = cols_ref[...]          # [BR, K] in-bucket indices (< block_cols)
+    vals = vals_ref[...]          # [BR, K]
+    x = x_ref[...]                # [BC, 1] — only this bucket's x slice
+    partial = jnp.sum(vals * x[cols, 0], axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _accumulate():
+        y_ref[...] = y_ref[...] + partial
+
+
+def spmv_ell_blocked(
+    cols: jnp.ndarray,   # [R, C*K] int32 in-bucket indices (padding -> 0)
+    vals: jnp.ndarray,   # [R, C*K]     (padding -> 0.0)
+    x: jnp.ndarray,      # [C * block_cols]
+    *,
+    block_cols: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Column-blocked ELL SpMV: y[i] = sum_j sum_k vals[i,j*K+k] *
+    x[j*bc + cols[i,j*K+k]].
+
+    Grid is (row blocks, column buckets); the x BlockSpec is column-tiled so
+    a grid step only holds one ``block_cols`` slice of x in VMEM, and the
+    output row block accumulates over the sequential second grid dim.
+    VMEM residency is therefore independent of ``len(x)`` — this is the
+    paper-scale-fine-level path.
+    """
+    R = cols.shape[0]
+    bc = int(block_cols)
+    assert x.shape[0] % bc == 0, (x.shape, bc)
+    C = x.shape[0] // bc
+    assert cols.shape[1] % C == 0, (cols.shape, C)
+    K = cols.shape[1] // C
+    cols, vals, br = _pad_rows(cols, vals, block_rows)
+    Rp = cols.shape[0]
+    return pl.pallas_call(
+        _spmv_blocked_kernel,
+        grid=(Rp // br, C),
+        in_specs=[
+            pl.BlockSpec((br, K), lambda i, j: (i, j)),
+            pl.BlockSpec((br, K), lambda i, j: (i, j)),
+            pl.BlockSpec((bc, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), vals.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cols, vals, x[:, None])[:R, 0]

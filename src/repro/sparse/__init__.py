@@ -11,10 +11,18 @@ from .partition import (
 )
 from .device import (
     DeviceEll,
+    DeviceEllBlocked,
+    KernelSelection,
+    default_spmv_vmem_limit,
     distributed_spmv,
     make_distributed_spmv,
     pack_vector,
+    partitioned_to_device,
     partitioned_to_ell,
+    partitioned_to_ell_blocked,
+    select_spmv_kernel,
+    spmv_blocked_vmem_bytes,
+    spmv_flat_vmem_bytes,
     unpack_vector,
 )
 from .spgemm import (
@@ -30,8 +38,11 @@ __all__ = [
     "CSR", "PartitionedCSR", "block_offsets", "distributed_spmv_numpy",
     "partition_csr", "partition_rect_csr", "partitioned_from_blocks",
     "split_rows", "stack_blocks",
-    "DeviceEll", "distributed_spmv", "make_distributed_spmv",
-    "pack_vector", "partitioned_to_ell", "unpack_vector",
+    "DeviceEll", "DeviceEllBlocked", "KernelSelection",
+    "default_spmv_vmem_limit", "distributed_spmv", "make_distributed_spmv",
+    "pack_vector", "partitioned_to_device", "partitioned_to_ell",
+    "partitioned_to_ell_blocked", "select_spmv_kernel",
+    "spmv_blocked_vmem_bytes", "spmv_flat_vmem_bytes", "unpack_vector",
     "RapResult", "RowGather", "gather_remote_rows", "merge_row_sets",
     "spgemm_local", "spgemm_rap",
 ]

@@ -2,33 +2,53 @@
 
 This is the device half of the paper's workload: the persistent neighborhood
 collective (``core.collectives``) delivers ghost values and the ``spmv_ell``
-kernel multiplies the per-device local and ghost blocks.  Everything is
+kernels multiply the per-device local and ghost blocks.  Everything is
 static-shape SPMD: each process's blocks are padded to uniform sizes so one
 ``shard_map`` program serves all devices.
 
-Layouts (all leading dim ``P`` = processes, sharded over the mesh axis):
+Two device layouts, selected per operator by VMEM footprint
+(:func:`select_spmv_kernel`):
 
-* vectors: ``[P, pad]`` as produced by :func:`pack_vector` /
-  ``core.collectives.pack_local_values`` — zero-padded per block;
-* ELL blocks: ``cols``/``vals`` ``[P, row_pad, K]`` with padding entries
-  pointing at a sentinel slot (index ``in_pad`` resp. ``ghost_pad``) that the
-  per-device program materializes as an appended zero.
+* **flat** (:class:`DeviceEll`): ``cols``/``vals`` ``[P, row_pad, K]`` with
+  padding entries pointing at a sentinel slot (index ``in_pad`` resp.
+  ``ghost_pad``) that the per-device program materializes as an appended
+  zero.  The whole per-device x (local + ghost) is VMEM-resident in the
+  kernel — right for coarse levels and small blocks.
+
+* **column-blocked** (:class:`DeviceEllBlocked`): each row's nonzeros are
+  reordered into column buckets of ``block_cols`` x entries; local columns
+  fill the leading buckets, ghost columns the *trailing* buckets, so the
+  halo-dependent partial products land in the last accumulation steps of
+  the kernel's sequential column-bucket grid dim.  Per-bucket nonzero
+  widths (``bucket_K``) are padded to one uniform K so a single BlockSpec
+  serves every grid step; padding entries are (in-bucket col 0, val 0.0).
+  VMEM residency is then independent of the x length — the production path
+  for paper-scale fine levels.
+
+Vectors are ``[P, pad]`` as produced by :func:`pack_vector` /
+``core.collectives.pack_local_values`` — zero-padded per block.
 
 Entry points:
 
-* :func:`partitioned_to_ell` — ``PartitionedCSR -> DeviceEll`` conversion;
-* :func:`make_distributed_spmv` — build ``fn(x [P, in_pad]) -> y [P, row_pad]``
-  composing exchange + local/ghost ELL matvecs (jit it, or fuse into a larger
-  jitted program — that is how exchange/compute overlap materializes);
+* :func:`partitioned_to_ell` / :func:`partitioned_to_ell_blocked` —
+  ``PartitionedCSR ->`` device form conversions;
+* :func:`select_spmv_kernel` — modeled-VMEM flat-vs-blocked choice
+  (threshold overridable via ``REPRO_SPMV_VMEM_LIMIT_BYTES`` or argument);
+* :func:`make_distributed_spmv` — build ``fn(x [P, in_pad]) -> y [P,
+  row_pad]`` composing exchange + ELL matvec(s) for either layout (jit it,
+  or fuse into a larger jitted program — that is how exchange/compute
+  overlap materializes);
 * :func:`distributed_spmv` — one-shot convenience on a numpy vector.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
+from ..kernels.spmv_ell import DEFAULT_BLOCK_COLS, DEFAULT_BLOCK_ROWS
 from .csr import CSR
 from .partition import PartitionedCSR
 
@@ -89,6 +109,261 @@ def partitioned_to_ell(part: PartitionedCSR, dtype=np.float64) -> DeviceEll:
     return DeviceEll(P_, row_pad, in_pad, ghost_pad, lc, lv, gc, gv)
 
 
+@dataclass
+class DeviceEllBlocked:
+    """Column-bucketed padded-ELL blocks for the blocked SpMV kernel.
+
+    One structure covers local *and* ghost columns: the per-device gather
+    space is ``[local values | zero-fill to bucket edge | ghost values |
+    zero-fill]`` of length ``n_buckets * block_cols``; bucket ``j`` of
+    ``cols``/``vals`` (columns [j*K, (j+1)*K)) holds in-bucket indices into
+    x slice ``j``.  Ghost columns occupy the trailing ``n_ghost_buckets``
+    buckets, so halo-dependent work runs in the kernel's last accumulation
+    steps.
+    """
+
+    n_procs: int
+    row_pad: int     # uniform padded rows per process (== output vector pad)
+    in_pad: int      # uniform padded input-vector block size
+    ghost_pad: int   # uniform padded ghost count (0 => no exchange needed)
+    block_cols: int
+    n_local_buckets: int
+    n_ghost_buckets: int
+    K: int                   # uniform per-bucket padded width (max bucket_K)
+    cols: np.ndarray         # [P, row_pad, n_buckets*K] int32 in-bucket idx
+    vals: np.ndarray         # [P, row_pad, n_buckets*K]
+    bucket_K: np.ndarray     # [n_buckets] max nnz of each bucket pre-padding
+
+    @property
+    def n_buckets(self) -> int:
+        return self.n_local_buckets + self.n_ghost_buckets
+
+    @property
+    def x_len(self) -> int:
+        return self.n_buckets * self.block_cols
+
+
+def _bucket_positions(rows: np.ndarray, buckets: np.ndarray, n_buckets: int):
+    """Occurrence index of each entry within its (row, bucket) group."""
+    key = rows.astype(np.int64) * n_buckets + buckets
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    new = np.concatenate([[True], ks[1:] != ks[:-1]])
+    starts = np.flatnonzero(new)
+    group = np.cumsum(new) - 1
+    pos_sorted = np.arange(len(key)) - starts[group]
+    pos = np.empty(len(key), dtype=np.int64)
+    pos[order] = pos_sorted
+    return pos
+
+
+def _bucketed(m: CSR, bc: int, bucket0: int):
+    """CSR block entries as (rows, buckets, in-bucket cols, vals)."""
+    if not m.nnz:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z, np.zeros(0)
+    rows = m.row_indices().astype(np.int64)
+    cols = m.indices.astype(np.int64)
+    return rows, bucket0 + cols // bc, cols % bc, m.data
+
+
+def partitioned_to_ell_blocked(
+    part: PartitionedCSR,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+    dtype=np.float64,
+) -> DeviceEllBlocked:
+    """Convert a partition to the column-bucketed blocked-ELL device form.
+
+    Row padding matches :func:`partitioned_to_ell` so the two layouts are
+    interchangeable level by level.  Each row's nonzeros are reordered into
+    column buckets (local buckets first, ghost buckets trailing); per-bucket
+    widths are recorded in ``bucket_K`` and padded to their max so one
+    BlockSpec serves all grid steps of the blocked kernel.
+    """
+    P_ = part.n_procs
+    bc = int(block_cols)
+    assert bc > 0, bc
+    row_pad = int(np.diff(part.offsets).max())
+    in_pad = int(np.diff(part.col_offsets).max())
+    ghost_pad = int(max((len(n) for n in part.needs), default=0))
+    Cl = max(-(-in_pad // bc), 1)
+    Cg = -(-ghost_pad // bc)
+    C = Cl + Cg
+
+    entries = []
+    bucket_K = np.zeros(C, dtype=np.int64)
+    for p in range(P_):
+        rows_l, b_l, c_l, v_l = _bucketed(part.local[p], bc, 0)
+        rows_g, b_g, c_g, v_g = _bucketed(part.ghost[p], bc, Cl)
+        rows = np.concatenate([rows_l, rows_g])
+        buckets = np.concatenate([b_l, b_g])
+        incols = np.concatenate([c_l, c_g])
+        vals = np.concatenate([v_l, v_g])
+        entries.append((rows, buckets, incols, vals))
+        if len(rows):
+            cnt = np.bincount(rows * C + buckets, minlength=row_pad * C)
+            bucket_K = np.maximum(bucket_K, cnt.reshape(row_pad, C).max(0))
+    K = max(int(bucket_K.max()), 1)
+
+    cols = np.zeros((P_, row_pad, C * K), dtype=np.int32)
+    vals_out = np.zeros((P_, row_pad, C * K), dtype=dtype)
+    for p, (rows, buckets, incols, vals) in enumerate(entries):
+        if not len(rows):
+            continue
+        pos = _bucket_positions(rows, buckets, C)
+        slot = buckets * K + pos
+        cols[p, rows, slot] = incols
+        vals_out[p, rows, slot] = vals
+    return DeviceEllBlocked(
+        P_, row_pad, in_pad, ghost_pad, bc, Cl, Cg, K, cols, vals_out,
+        bucket_K,
+    )
+
+
+# --------------------------------------------------------------- selection
+#: Usable VMEM per TPU core; the working budget defaults to half of it
+#: (double buffering + headroom for the rest of the fused program).
+VMEM_BYTES_PER_CORE = 16 * 2 ** 20
+_IDX_BYTES = 4  # int32 column indices
+
+
+def default_spmv_vmem_limit() -> int:
+    """Flat-vs-blocked threshold; ``REPRO_SPMV_VMEM_LIMIT_BYTES`` overrides."""
+    env = os.environ.get("REPRO_SPMV_VMEM_LIMIT_BYTES")
+    return int(env) if env else VMEM_BYTES_PER_CORE // 2
+
+
+def spmv_flat_vmem_bytes(
+    *,
+    in_pad: int,
+    ghost_pad: int,
+    k_local: int,
+    k_ghost: int,
+    value_bytes: int = 8,
+    rows: Optional[int] = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> int:
+    """Modeled per-device VMEM residency of the flat SpMV path.
+
+    The flat path is two kernels (local + ghost matvec); this budget sums
+    both deliberately — inside the fused jitted program XLA is free to
+    schedule them concurrently (exchange/compute overlap is the point of
+    the design), so near the threshold the conservative assumption is that
+    both x vectors and both double-buffered cols/vals streams are resident
+    at once.  ``rows`` clamps the row block exactly like the kernel does
+    (``min(block_rows, R)``).
+    """
+    br = min(int(block_rows), int(rows)) if rows else int(block_rows)
+    x_bytes = (in_pad + 1 + ghost_pad + (1 if ghost_pad else 0)) * value_bytes
+    stream = 2 * br * (k_local + k_ghost) * (_IDX_BYTES + value_bytes)
+    out = br * value_bytes
+    return int(x_bytes + stream + out)
+
+
+def spmv_blocked_vmem_bytes(
+    *,
+    bucket_k: int,
+    value_bytes: int = 8,
+    rows: Optional[int] = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> int:
+    """Modeled per-device VMEM residency of the column-blocked SpMV path:
+    one x bucket + one cols/vals bucket block, double-buffered — independent
+    of the x length."""
+    br = min(int(block_rows), int(rows)) if rows else int(block_rows)
+    bc = int(block_cols)
+    x_bytes = 2 * bc * value_bytes
+    stream = 2 * br * bucket_k * (_IDX_BYTES + value_bytes)
+    out = br * value_bytes
+    return int(x_bytes + stream + out)
+
+
+@dataclass(frozen=True)
+class KernelSelection:
+    """The flat-vs-blocked choice for one operator, recorded alongside the
+    plan's Section-5 transport choice so both selections are inspectable."""
+
+    variant: str            # "flat" | "blocked"
+    flat_bytes: int         # modeled flat footprint
+    blocked_bytes: int      # modeled blocked footprint (bucket-K upper bound)
+    limit_bytes: int        # threshold the choice was made against
+    forced: bool = False    # True when the variant was pinned, not selected
+
+    def __str__(self) -> str:
+        how = "forced" if self.forced else "auto"
+        return (
+            f"kernel={self.variant} ({how}) "
+            f"flat={self.flat_bytes / 2**10:.0f}KiB "
+            f"blocked={self.blocked_bytes / 2**10:.0f}KiB "
+            f"limit={self.limit_bytes / 2**10:.0f}KiB"
+        )
+
+
+def _ell_widths(part: PartitionedCSR) -> tuple:
+    kl = max(
+        max((int(np.diff(m.indptr).max()) for m in part.local if m.nnz),
+            default=0), 1,
+    )
+    kg = max(
+        max((int(np.diff(m.indptr).max()) for m in part.ghost if m.nnz),
+            default=0), 1,
+    )
+    return kl, kg
+
+
+def select_spmv_kernel(
+    part: PartitionedCSR,
+    *,
+    variant: str = "auto",
+    vmem_limit_bytes: Optional[int] = None,
+    value_bytes: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> KernelSelection:
+    """Choose the SpMV device layout for one partitioned operator.
+
+    ``variant="auto"`` compares the modeled flat footprint (whole x
+    VMEM-resident) against the threshold and falls over to the blocked
+    kernel when it does not fit; ``"flat"``/``"blocked"`` pin the choice
+    (recorded as forced).  The blocked estimate uses the max row width as a
+    bucket-K upper bound — packing can only shrink it.
+    """
+    limit = (default_spmv_vmem_limit()
+             if vmem_limit_bytes is None else int(vmem_limit_bytes))
+    row_pad = int(np.diff(part.offsets).max())
+    in_pad = int(np.diff(part.col_offsets).max())
+    ghost_pad = int(max((len(n) for n in part.needs), default=0))
+    kl, kg = _ell_widths(part)
+    flat = spmv_flat_vmem_bytes(
+        in_pad=in_pad, ghost_pad=ghost_pad, k_local=kl, k_ghost=kg,
+        value_bytes=value_bytes, rows=row_pad, block_rows=block_rows,
+    )
+    blocked = spmv_blocked_vmem_bytes(
+        bucket_k=max(kl, kg), value_bytes=value_bytes,
+        rows=row_pad, block_rows=block_rows, block_cols=block_cols,
+    )
+    if variant == "auto":
+        return KernelSelection(
+            "flat" if flat <= limit else "blocked", flat, blocked, limit
+        )
+    if variant not in ("flat", "blocked"):
+        raise ValueError(f"unknown spmv variant {variant!r}")
+    return KernelSelection(variant, flat, blocked, limit, forced=True)
+
+
+def partitioned_to_device(
+    part: PartitionedCSR,
+    selection: KernelSelection,
+    dtype=np.float64,
+    block_cols: int = DEFAULT_BLOCK_COLS,
+) -> Union[DeviceEll, "DeviceEllBlocked"]:
+    """Convert a partition to the device form the selection calls for."""
+    if selection.variant == "blocked":
+        return partitioned_to_ell_blocked(part, block_cols, dtype)
+    return partitioned_to_ell(part, dtype)
+
+
 def pack_vector(offsets: np.ndarray, pad: int, x: np.ndarray) -> np.ndarray:
     """Global vector -> [P, pad] block layout (zero padding)."""
     P_ = len(offsets) - 1
@@ -111,7 +386,7 @@ def unpack_vector(offsets: np.ndarray, y: np.ndarray) -> np.ndarray:
 
 
 def make_distributed_spmv(
-    ell: DeviceEll,
+    ell: Union[DeviceEll, DeviceEllBlocked],
     mesh,
     axis_name: str,
     exchange: Optional[Callable] = None,
@@ -120,10 +395,17 @@ def make_distributed_spmv(
 
     ``exchange`` is a bound plan executor (``NeighborAlltoallV.bind`` /
     ``PlanCache.executor``) mapping ``[P, in_pad, 1] -> [P, ghost_pad, 1]``;
-    required unless ``ell.ghost_pad == 0`` (fully local operator).  The local
-    and ghost matvecs go through ``kernels.spmv_ell.ops.spmv`` and therefore
-    dispatch to the Pallas kernel on TPU and the jnp reference on CPU.
+    required unless ``ell.ghost_pad == 0`` (fully local operator).  The
+    matvecs go through ``kernels.spmv_ell.ops`` and therefore dispatch to
+    the Pallas kernels on TPU and the jnp references on CPU.  A
+    :class:`DeviceEllBlocked` selects the column-blocked kernel: local and
+    ghost values are concatenated into the bucketed gather space and one
+    accumulating kernel covers both (ghost buckets trail, so halo-dependent
+    work lands in the last accumulation steps).
     """
+    if isinstance(ell, DeviceEllBlocked):
+        return _make_distributed_spmv_blocked(ell, mesh, axis_name, exchange)
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -173,6 +455,60 @@ def make_distributed_spmv(
     return spmv_fn
 
 
+def _make_distributed_spmv_blocked(
+    ell: DeviceEllBlocked,
+    mesh,
+    axis_name: str,
+    exchange: Optional[Callable] = None,
+) -> Callable:
+    """Blocked-layout counterpart of :func:`make_distributed_spmv`."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..compat import shard_map
+    from ..kernels.spmv_ell.ops import spmv_blocked
+
+    if ell.ghost_pad and exchange is None:
+        raise ValueError("operator has ghost columns: exchange required")
+
+    spec = P(axis_name)
+    consts = [
+        jax.device_put(a, NamedSharding(mesh, spec))
+        for a in (ell.cols, ell.vals)
+    ]
+    has_ghost = ell.ghost_pad > 0
+    bc = ell.block_cols
+    local_fill = ell.n_local_buckets * bc - ell.in_pad
+    ghost_fill = ell.n_ghost_buckets * bc - ell.ghost_pad
+
+    def per_device(x_blk, gh_blk, cols, vals):
+        x = x_blk[0]
+        parts = [x, jnp.zeros((local_fill,), x.dtype)]
+        if has_ghost:
+            parts += [gh_blk[0], jnp.zeros((ghost_fill,), x.dtype)]
+        xcat = jnp.concatenate(parts)     # [n_buckets * block_cols]
+        y = spmv_blocked(cols[0], vals[0], xcat, bc)
+        return y[None]
+
+    mm = shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(spec,) * 4,
+        out_specs=spec,
+        check_rep=False,
+    )
+
+    def spmv_fn(x):
+        if has_ghost:
+            gh = exchange(x[..., None])[..., 0]
+        else:
+            gh = jnp.zeros((ell.n_procs, 0), x.dtype)
+        return mm(x, gh, *consts)
+
+    return spmv_fn
+
+
 def distributed_spmv(
     part: PartitionedCSR,
     coll,
@@ -180,15 +516,19 @@ def distributed_spmv(
     axis_name: str,
     x: np.ndarray,
     dtype=np.float64,
+    variant: str = "flat",
+    block_cols: int = DEFAULT_BLOCK_COLS,
 ) -> np.ndarray:
     """One-shot device distributed SpMV of a numpy vector (convenience).
 
-    For repeated products build the function once with
+    ``variant`` is ``"flat"``, ``"blocked"``, or ``"auto"`` (modeled-VMEM
+    selection).  For repeated products build the function once with
     :func:`make_distributed_spmv` and jit it.
     """
     import jax
 
-    ell = partitioned_to_ell(part, dtype)
+    sel = select_spmv_kernel(part, variant=variant, block_cols=block_cols)
+    ell = partitioned_to_device(part, sel, dtype, block_cols)
     exchange = coll.bind(mesh, axis_name) if ell.ghost_pad else None
     fn = jax.jit(make_distributed_spmv(ell, mesh, axis_name, exchange))
     xg = pack_vector(part.col_offsets, ell.in_pad, x.astype(dtype))

@@ -1,0 +1,133 @@
+"""Unit tests for the CI perf-regression gate (benchmarks.compare)."""
+import json
+
+import pytest
+
+from benchmarks.compare import compare, is_deterministic, main, parse_derived
+
+
+def payload(rows, schema=2, failed=()):
+    return {
+        "schema_version": schema,
+        "git_sha": "abc",
+        "failed_sections": list(failed),
+        "results": [
+            {"name": n, "us_per_call": us, "derived": d}
+            for n, us, d in rows
+        ],
+    }
+
+
+MODELED = ("fig/a", 100.0, "kind=modeled-lassen|x_us=41.3|strategy=partial")
+MEASURED = ("bench/m", 250.0, "kind=measured-device|strategy=standard|")
+
+
+def test_parse_derived():
+    kind, fields = parse_derived("kind=modeled-lassen|a=1.5|flag")
+    assert kind == "modeled-lassen"
+    assert fields == {"a": "1.5", "flag": "flag"}
+    assert is_deterministic("modeled-tpu-v5e")
+    assert is_deterministic("exact-plan")
+    assert not is_deterministic("measured-host")
+
+
+def test_identical_runs_pass():
+    base = payload([MODELED, MEASURED])
+    diff = compare(base, payload([MODELED, MEASURED]))
+    assert diff["status"] == "ok" and diff["checked"] == 2
+
+
+def test_modeled_drift_fails():
+    new = payload([("fig/a", 130.0,
+                    "kind=modeled-lassen|x_us=41.3|strategy=partial"),
+                   MEASURED])
+    diff = compare(payload([MODELED, MEASURED]), new)
+    assert diff["status"] == "regression"
+    assert any(r["what"] == "modeled-us-drift" for r in diff["regressions"])
+
+
+def test_modeled_derived_field_drift_fails():
+    new = payload([("fig/a", 100.0,
+                    "kind=modeled-lassen|x_us=55.0|strategy=partial"),
+                   MEASURED])
+    diff = compare(payload([MODELED, MEASURED]), new)
+    assert any(r["what"] == "derived-field-drift"
+               for r in diff["regressions"])
+
+
+def test_selection_flip_fails():
+    """A strategy/variant choice change in a deterministic row is gated."""
+    new = payload([("fig/a", 100.0,
+                    "kind=modeled-lassen|x_us=41.3|strategy=full"),
+                   MEASURED])
+    diff = compare(payload([MODELED, MEASURED]), new)
+    assert any(r["what"] == "derived-field-changed"
+               and r["field"] == "strategy" for r in diff["regressions"])
+
+
+def test_measured_band_is_generous_but_bounded():
+    ok = payload([MODELED, ("bench/m", 250.0 * 5, MEASURED[2])])
+    assert compare(payload([MODELED, MEASURED]), ok)["status"] == "ok"
+    bad = payload([MODELED, ("bench/m", 250.0 * 50, MEASURED[2])])
+    diff = compare(payload([MODELED, MEASURED]), bad)
+    assert any(r["what"] == "measured-out-of-band"
+               for r in diff["regressions"])
+    # measured derived fields are never compared
+    relabeled = payload([MODELED,
+                         ("bench/m", 240.0,
+                          "kind=measured-device|strategy=partial|")])
+    assert compare(payload([MODELED, MEASURED]), relabeled)["status"] == "ok"
+
+
+def test_measured_inside_modeled_rows_exempt():
+    """measured_* fields inside deterministic rows are informational."""
+    base = payload([("fig/a", 100.0,
+                     "kind=modeled-lassen|x_us=41.3|measured_planning_s=0.03")])
+    new = payload([("fig/a", 100.0,
+                    "kind=modeled-lassen|x_us=41.3|measured_planning_s=0.91")])
+    assert compare(base, new)["status"] == "ok"
+
+
+def test_missing_row_fails_new_row_warns():
+    diff = compare(payload([MODELED, MEASURED]), payload([MODELED]))
+    assert any(r["what"] == "missing-row" for r in diff["regressions"])
+    extra = ("new/row", 1.0, "kind=modeled-lassen|")
+    diff = compare(payload([MODELED]), payload([MODELED, extra]))
+    assert diff["status"] == "ok" and diff["new_rows"] == ["new/row"]
+
+
+def test_schema_mismatch_fails():
+    diff = compare(payload([MODELED]), payload([MODELED], schema=3))
+    assert diff["status"] == "regression"
+    assert diff["regressions"][0]["what"] == "schema-version-mismatch"
+
+
+def test_failed_sections_fail():
+    diff = compare(payload([MODELED]),
+                   payload([MODELED], failed=["moe_comm"]))
+    assert any(r["what"] == "failed-sections" for r in diff["regressions"])
+
+
+@pytest.mark.parametrize("mutate,code", [
+    (lambda p: p, 0),
+    (lambda p: payload([("fig/a", 150.0, MODELED[2])]), 1),
+])
+def test_cli_exit_codes(tmp_path, mutate, code):
+    base = payload([MODELED])
+    b = tmp_path / "baseline.json"
+    n = tmp_path / "new.json"
+    d = tmp_path / "diff.json"
+    b.write_text(json.dumps(base))
+    n.write_text(json.dumps(mutate(base)))
+    rc = main([str(b), str(n), "--diff-out", str(d)])
+    assert rc == code
+    assert json.loads(d.read_text())["status"] == ("ok" if code == 0
+                                                   else "regression")
+
+
+def test_cli_unusable_input(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(payload([MODELED])))
+    assert main([str(bad), str(ok)]) == 2

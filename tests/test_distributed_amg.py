@@ -38,3 +38,13 @@ def test_distributed_amg_vcycle_matches_host():
     # Section-5 selector: fine level standard, >=2 strategies over levels
     assert "A=standard" in out
     assert "A=full" in out or "A=partial" in out
+
+
+def test_blocked_spmv_hierarchy_matches_host():
+    """Column-blocked kernel end to end: forced-blocked and auto-selected
+    (fine blocked / coarse flat) hierarchies both track the host solver."""
+    out = run_prog("check_blocked_spmv.py")
+    assert "ALL_OK" in out
+    assert "forced-blocked residual history OK" in out
+    assert "auto mixed-variant residual history OK" in out
+    assert "kern=blocked" in out and "kern=flat" in out

@@ -12,6 +12,9 @@ Invariants under test:
   P6  The cost model is monotone in message sizes.
   P7  MoE capacity packing: slots are unique, within bounds, and respect
       per-expert capacity.
+  P8  Column-bucketed ELL packing + the blocked SpMV kernel agree with the
+      flat kernel, the jnp oracle, and the host matvec on ANY random
+      sparsity/ghost pattern.
 """
 import numpy as np
 import pytest
@@ -28,6 +31,7 @@ from repro.core import (
     plan_time,
 )
 from repro.core.locality import balance_assignments
+from repro.sparse import CSR
 
 
 @st.composite
@@ -133,6 +137,89 @@ def test_p6_costmodel_monotone(pt):
     plan8 = build_plan(pattern, topo, "standard", value_bytes=8)
     plan16 = build_plan(pattern, topo, "standard", value_bytes=16)
     assert plan_time(plan16, LASSEN) >= plan_time(plan8, LASSEN) - 1e-12
+
+
+@st.composite
+def sparse_partitions(draw):
+    """A random square CSR (uneven blocks, random sparsity => random ghost
+    pattern) plus a bucket width and rng seed."""
+    n_procs = draw(st.integers(1, 3))
+    n = draw(st.integers(n_procs, 24))
+    bc = draw(st.sampled_from([4, 8, 16]))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    nnz = int(rng.integers(0, 4 * n))
+    rows = rng.integers(0, n, size=nnz)
+    cols = rng.integers(0, n, size=nnz)
+    vals = rng.normal(size=nnz)
+    return CSR.from_coo(rows, cols, vals, (n, n)), n_procs, bc, seed
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_partitions())
+def test_p8_blocked_packing_matches_flat_and_ref(sp):
+    from repro.kernels.spmv_ell import spmv_ell_ref
+    from repro.kernels.spmv_ell.spmv_ell import spmv_ell, spmv_ell_blocked
+    from repro.sparse import (
+        partition_csr,
+        partitioned_to_ell,
+        partitioned_to_ell_blocked,
+    )
+    import jax.numpy as jnp
+
+    A, n_procs, bc, seed = sp
+    part = partition_csr(A, n_procs)
+    ell = partitioned_to_ell(part, dtype=np.float32)
+    bell = partitioned_to_ell_blocked(part, block_cols=bc, dtype=np.float32)
+    plan = build_plan(part.pattern, Topology(n_procs, 1), "standard")
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=A.ncols).astype(np.float32)
+    xs = [x[int(part.offsets[p]): int(part.offsets[p + 1])]
+          for p in range(n_procs)]
+    ghosts = plan.execute_numpy(xs)
+    want_all = A.matvec(x.astype(np.float64))
+    for p in range(n_procs):
+        n_rows = int(part.offsets[p + 1] - part.offsets[p])
+        # flat: local + ghost kernels with sentinel slots
+        xf = np.zeros(ell.in_pad + 1, dtype=np.float32)
+        xf[: len(xs[p])] = xs[p]
+        flat = spmv_ell(
+            jnp.asarray(ell.local_cols[p]), jnp.asarray(ell.local_vals[p]),
+            jnp.asarray(xf), block_rows=8, interpret=True,
+        )
+        ref = spmv_ell_ref(
+            jnp.asarray(ell.local_cols[p]), jnp.asarray(ell.local_vals[p]),
+            jnp.asarray(xf),
+        )
+        if ell.ghost_pad:
+            gf = np.zeros(ell.ghost_pad + 1, dtype=np.float32)
+            gf[: len(ghosts[p])] = ghosts[p].astype(np.float32)
+            flat = flat + spmv_ell(
+                jnp.asarray(ell.ghost_cols[p]),
+                jnp.asarray(ell.ghost_vals[p]),
+                jnp.asarray(gf), block_rows=8, interpret=True,
+            )
+            ref = ref + spmv_ell_ref(
+                jnp.asarray(ell.ghost_cols[p]),
+                jnp.asarray(ell.ghost_vals[p]), jnp.asarray(gf),
+            )
+        # blocked: one accumulating kernel over [local | ghost] buckets
+        xb = np.zeros(bell.x_len, dtype=np.float32)
+        xb[: len(xs[p])] = xs[p]
+        g0 = bell.n_local_buckets * bc
+        xb[g0: g0 + len(ghosts[p])] = ghosts[p].astype(np.float32)
+        blocked = spmv_ell_blocked(
+            jnp.asarray(bell.cols[p]), jnp.asarray(bell.vals[p]),
+            jnp.asarray(xb), block_cols=bc, block_rows=8, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(flat),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+        want = want_all[int(part.offsets[p]): int(part.offsets[p + 1])]
+        np.testing.assert_allclose(
+            np.asarray(blocked)[:n_rows], want, rtol=1e-4, atol=1e-4
+        )
 
 
 @settings(max_examples=40, deadline=None)

@@ -16,6 +16,10 @@ from repro.sparse import (
     partition_csr,
     partition_rect_csr,
     partitioned_to_ell,
+    partitioned_to_ell_blocked,
+    select_spmv_kernel,
+    spmv_blocked_vmem_bytes,
+    spmv_flat_vmem_bytes,
     unpack_vector,
 )
 
@@ -80,6 +84,95 @@ def test_pack_unpack_vector_roundtrip():
     packed = pack_vector(off, pad, x)
     assert packed.shape == (5, pad)
     np.testing.assert_array_equal(unpack_vector(off, packed), x)
+
+
+def _blocked_matvec(bell, p, x_local, ghosts):
+    """Numpy oracle of the bucketed gather for one process block."""
+    bc = bell.block_cols
+    xcat = np.zeros(bell.x_len)
+    xcat[: len(x_local)] = x_local
+    g0 = bell.n_local_buckets * bc
+    xcat[g0: g0 + len(ghosts)] = ghosts
+    base = np.repeat(np.arange(bell.n_buckets) * bc, bell.K)
+    return np.sum(bell.vals[p] * xcat[bell.cols[p] + base[None, :]], axis=1)
+
+
+def test_partitioned_to_ell_blocked_reproduces_blocks():
+    """Column-bucketed packing: per-proc blocked gather == CSR matvecs."""
+    A = diffusion_2d(16, 20)
+    n_procs = 8
+    part = partition_csr(A, n_procs)
+    bell = partitioned_to_ell_blocked(part, block_cols=16)
+    assert bell.row_pad == int(np.diff(part.offsets).max())
+    # ghost columns occupy the trailing buckets only
+    assert bell.n_ghost_buckets >= 1
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=A.nrows)
+    plan = build_plan(part.pattern, Topology(n_procs, 4), "standard")
+    xs = [x[int(part.offsets[p]): int(part.offsets[p + 1])]
+          for p in range(n_procs)]
+    ghosts = plan.execute_numpy(xs)
+    for p in range(n_procs):
+        y = _blocked_matvec(bell, p, xs[p], ghosts[p])
+        want = part.local[p].matvec(xs[p])
+        if part.ghost[p].ncols:
+            want = want + part.ghost[p].matvec(ghosts[p])
+        n_rows = int(part.offsets[p + 1] - part.offsets[p])
+        np.testing.assert_allclose(y[:n_rows], want, rtol=1e-12, atol=1e-12)
+        np.testing.assert_array_equal(y[n_rows:], 0.0)
+
+
+def test_blocked_bucket_structure():
+    """In-bucket indices stay inside their bucket; local entries never land
+    in ghost buckets (and vice versa); bucket_K bounds every bucket."""
+    A = diffusion_2d(12, 12)
+    part = partition_csr(A, 4)
+    bell = partitioned_to_ell_blocked(part, block_cols=8)
+    assert np.all(bell.cols >= 0) and np.all(bell.cols < bell.block_cols)
+    assert bell.K == int(bell.bucket_K.max())
+    C, K = bell.n_buckets, bell.K
+    for p in range(4):
+        live = bell.vals[p] != 0.0
+        per_bucket = live.reshape(bell.row_pad, C, K)
+        # per-(row,bucket) live counts never exceed the recorded bucket_K
+        counts = per_bucket.sum(axis=2)
+        assert np.all(counts.max(axis=0) <= bell.bucket_K)
+
+
+def test_vmem_estimators_and_selection():
+    """Flat footprint grows with x; blocked footprint does not — and the
+    selector flips exactly at the threshold."""
+    flat_small = spmv_flat_vmem_bytes(in_pad=1000, ghost_pad=100,
+                                      k_local=9, k_ghost=4, rows=1000)
+    flat_big = spmv_flat_vmem_bytes(in_pad=2 ** 21, ghost_pad=100,
+                                    k_local=9, k_ghost=4, rows=2 ** 21)
+    assert flat_big > flat_small
+    blk_small = spmv_blocked_vmem_bytes(bucket_k=9, rows=1000)
+    blk_big = spmv_blocked_vmem_bytes(bucket_k=9, rows=2 ** 21)
+    assert blk_big <= blk_small * 2  # row-clamp only; x-length independent
+    assert flat_big > 2 ** 23 > blk_big
+
+    A = diffusion_2d(24, 24)
+    part = partition_csr(A, 4)
+    auto = select_spmv_kernel(part)
+    assert auto.variant == "flat" and not auto.forced  # tiny x: flat fits
+    blocked = select_spmv_kernel(part, vmem_limit_bytes=auto.flat_bytes - 1)
+    assert blocked.variant == "blocked" and not blocked.forced
+    at_limit = select_spmv_kernel(part, vmem_limit_bytes=auto.flat_bytes)
+    assert at_limit.variant == "flat"
+    forced = select_spmv_kernel(part, variant="blocked")
+    assert forced.variant == "blocked" and forced.forced
+    with pytest.raises(ValueError):
+        select_spmv_kernel(part, variant="banana")
+
+
+def test_vmem_limit_env_override(monkeypatch):
+    from repro.sparse import default_spmv_vmem_limit
+
+    monkeypatch.setenv("REPRO_SPMV_VMEM_LIMIT_BYTES", "12345")
+    assert default_spmv_vmem_limit() == 12345
+    monkeypatch.delenv("REPRO_SPMV_VMEM_LIMIT_BYTES")
+    assert default_spmv_vmem_limit() == 8 * 2 ** 20
 
 
 def test_ell_padding_points_at_sentinel():
