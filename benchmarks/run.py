@@ -118,6 +118,16 @@ def spmv_kernel_rows(rows: int, n_procs: int):
     return selection_rows(rows, n_procs) + measured_rows(rows)
 
 
+def spmv_overlap_rows(rows: int, n_procs: int, tracer=None):
+    """Exchange/compute overlap: deterministic modeled decisions (per level
+    + paper-scale fine level, which must auto-select ``on``) and measured
+    overlap-off vs overlap-on distributed SpMV with equivalence asserted;
+    full-SpMV tracer samples carry pure_exchange=False."""
+    from .spmv_kernel import measured_overlap_rows, overlap_rows
+
+    return overlap_rows(rows, n_procs) + measured_overlap_rows(rows, tracer)
+
+
 def moe_comm_rows(smoke: bool, tracer=None):
     """MoE dispatch exchange: modeled per-mode comparison on a paper-scale
     EP group plus MEASURED jitted dispatch (all transports + auto) on the
@@ -286,6 +296,8 @@ def build_sections(rows: int, smoke: bool, tracer=None):
             ("setup_exchange",
              lambda: setup_exchange_modeled(rows, SMOKE_PROCS)),
             ("spmv_kernel", lambda: spmv_kernel_rows(rows, SMOKE_PROCS)),
+            ("spmv_overlap",
+             lambda: spmv_overlap_rows(rows, SMOKE_PROCS, tracer)),
             ("measured_exchange",
              lambda: measured_exchange_rows(rows, tracer)),
             ("measured_setup_exchange",
@@ -305,6 +317,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
         ("amg", paper_figs.amg_solver_convergence),
         ("setup_exchange", lambda: setup_exchange_modeled(rows, 256)),
         ("spmv_kernel", lambda: spmv_kernel_rows(rows, 256)),
+        ("spmv_overlap", lambda: spmv_overlap_rows(rows, 256, tracer)),
         ("measured_exchange",
          lambda: measured_exchange_rows(rows, tracer)),
         ("measured_setup_exchange",

@@ -31,7 +31,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from ..core.cache import PlanCache, default_plan_cache
-from ..core.costmodel import MachineParams, TPU_V5E
+from ..core.costmodel import MachineParams, TPU_V5E, plan_time
 from ..core.neighborhood import NeighborAlltoallV
 from ..core.plan import Topology
 from ..core.selection import SelectionReport
@@ -40,10 +40,12 @@ from ..sparse.device import (
     DeviceEll,
     DeviceEllBlocked,
     KernelSelection,
+    OverlapSelection,
     make_distributed_spmv,
     pack_vector,
     partitioned_to_device,
     select_spmv_kernel,
+    select_spmv_overlap,
     unpack_vector,
 )
 from ..sparse.partition import (
@@ -64,14 +66,16 @@ from .hierarchy import Hierarchy, inv_diag
 class DistOp:
     """One partitioned operator + its persistent collective + device form.
 
-    ``kernel`` records the flat-vs-blocked SpMV choice next to the plan's
-    Section-5 transport choice, so both selections travel with the operator.
+    ``kernel`` records the flat-vs-blocked SpMV choice and ``overlap`` the
+    exchange/compute-overlap schedule choice, next to the plan's Section-5
+    transport choice, so all three selections travel with the operator.
     """
 
     part: PartitionedCSR
     coll: NeighborAlltoallV
     ell: "DeviceEll | DeviceEllBlocked"
     kernel: Optional[KernelSelection] = None
+    overlap: Optional[OverlapSelection] = None
 
     @property
     def strategy(self) -> str:
@@ -84,6 +88,10 @@ class DistOp:
     @property
     def kernel_variant(self) -> str:
         return self.kernel.variant if self.kernel else "flat"
+
+    @property
+    def overlap_mode(self) -> str:
+        return self.overlap.mode if self.overlap else "off"
 
 
 @dataclass
@@ -121,6 +129,7 @@ class DistributedHierarchy:
         value_bytes: int,
         spmv_variant: str = "auto",
         spmv_vmem_limit: Optional[int] = None,
+        spmv_overlap: str = "auto",
     ):
         self.levels = levels
         self.mesh = mesh
@@ -136,6 +145,8 @@ class DistributedHierarchy:
         # the flat-vs-blocked kernel policy the hierarchy was built under
         self.spmv_variant = spmv_variant
         self.spmv_vmem_limit = spmv_vmem_limit
+        # the exchange/compute-overlap policy (auto | on | off)
+        self.spmv_overlap = spmv_overlap
         # populated by setup_partitioned: the distributed-setup record
         # (per-level blocks + exchange accounting), None for host lowering
         self.setup_info: Optional[DistributedSetup] = None
@@ -157,6 +168,7 @@ class DistributedHierarchy:
         spmv_variant: str = "auto",
         spmv_vmem_limit: Optional[int] = None,
         spmv_block_cols: int = DEFAULT_BLOCK_COLS,
+        spmv_overlap: str = "auto",
     ) -> "DistributedHierarchy":
         """Partition every level and init its collectives once (persistent).
 
@@ -166,7 +178,10 @@ class DistributedHierarchy:
         SpMV kernel per operator from its modeled VMEM footprint against
         ``spmv_vmem_limit`` (default: :func:`~repro.sparse.device.
         default_spmv_vmem_limit`, env-overridable); ``"flat"``/``"blocked"``
-        pin it.  The choice is recorded on each :class:`DistOp`.
+        pin it.  ``spmv_overlap="auto"`` selects the split
+        exchange/compute-overlap schedule per operator whenever the modeled
+        hidden exchange time beats the split overhead; ``"on"``/``"off"``
+        pin it.  All choices are recorded on each :class:`DistOp`.
         """
         n_procs = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name])
         topo = Topology(
@@ -185,7 +200,11 @@ class DistributedHierarchy:
                 value_bytes=value_bytes, block_cols=spmv_block_cols,
             )
             ell = partitioned_to_device(part, sel, dtype, spmv_block_cols)
-            return DistOp(part, coll, ell, sel)
+            osel = select_spmv_overlap(
+                part, plan_time(coll.plan, params),
+                mode=spmv_overlap, value_bytes=value_bytes,
+            )
+            return DistOp(part, coll, ell, sel, osel)
 
         offs = [block_offsets(lvl.A.nrows, n_procs) for lvl in h.levels]
         levels: List[DistributedLevel] = []
@@ -208,7 +227,8 @@ class DistributedHierarchy:
         return cls(levels, mesh, axis_name, topo, cache, dtype,
                    strategy, params, value_bytes,
                    spmv_variant=spmv_variant,
-                   spmv_vmem_limit=spmv_vmem_limit)
+                   spmv_vmem_limit=spmv_vmem_limit,
+                   spmv_overlap=spmv_overlap)
 
     @classmethod
     def setup_partitioned(
@@ -230,6 +250,7 @@ class DistributedHierarchy:
         spmv_variant: str = "auto",
         spmv_vmem_limit: Optional[int] = None,
         spmv_block_cols: int = DEFAULT_BLOCK_COLS,
+        spmv_overlap: str = "auto",
     ) -> "DistributedHierarchy":
         """End-to-end distributed build: partitioned fine matrix -> solve.
 
@@ -265,7 +286,11 @@ class DistributedHierarchy:
                 value_bytes=value_bytes, block_cols=spmv_block_cols,
             )
             ell = partitioned_to_device(part, sel, dtype, spmv_block_cols)
-            return DistOp(part, coll, ell, sel)
+            osel = select_spmv_overlap(
+                part, plan_time(coll.plan, params),
+                mode=spmv_overlap, value_bytes=value_bytes,
+            )
+            return DistOp(part, coll, ell, sel, osel)
 
         levels: List[DistributedLevel] = []
         for k, sl in enumerate(setup.levels):
@@ -287,7 +312,8 @@ class DistributedHierarchy:
         dh = cls(levels, mesh, axis_name, topo, cache, dtype,
                  strategy, params, value_bytes,
                  spmv_variant=spmv_variant,
-                 spmv_vmem_limit=spmv_vmem_limit)
+                 spmv_vmem_limit=spmv_vmem_limit,
+                 spmv_overlap=spmv_overlap)
         dh.setup_info = setup
         return dh
 
@@ -297,7 +323,8 @@ class DistributedHierarchy:
         if op.ell.ghost_pad:
             exchange = self._bind_exchange_only(op)
         return make_distributed_spmv(
-            op.ell, self.mesh, self.axis_name, exchange
+            op.ell, self.mesh, self.axis_name, exchange,
+            overlap=(op.overlap_mode == "on"),
         )
 
     def _build_device_fns(self) -> None:
@@ -406,17 +433,23 @@ class DistributedHierarchy:
                 rows.append((lv.index, name, op.strategy, rep))
         return rows
 
-    def kernel_table(self) -> List[Tuple[int, str, str, Optional[str]]]:
-        """[(level, op, kernel variant, selection report)] — the flat-vs-
-        blocked SpMV choice per operator, mirroring :meth:`selection_table`
-        for the transport choice."""
+    def kernel_table(
+        self,
+    ) -> List[Tuple[int, str, str, str, Optional[str]]]:
+        """[(level, op, kernel variant, overlap mode, selection report)] —
+        the flat-vs-blocked SpMV choice and the exchange/compute-overlap
+        choice per operator, mirroring :meth:`selection_table` for the
+        transport choice."""
         rows = []
         for lv in self.levels:
             for name, op in (("A", lv.A), ("R", lv.R), ("P", lv.P)):
                 if op is None:
                     continue
-                rep = str(op.kernel) if op.kernel else None
-                rows.append((lv.index, name, op.kernel_variant, rep))
+                reps = [str(s) for s in (op.kernel, op.overlap) if s]
+                rep = "; ".join(reps) if reps else None
+                rows.append(
+                    (lv.index, name, op.kernel_variant, op.overlap_mode, rep)
+                )
         return rows
 
     def describe(self) -> str:
@@ -430,6 +463,7 @@ class DistributedHierarchy:
             lines.append(
                 f"  L{lv.index}: n={lv.n:>8,d} pad={lv.pad:>6d} "
                 f"A={lv.A.strategy:8s} kern={lv.A.kernel_variant:7s} "
+                f"ov={lv.A.overlap_mode:4s} "
                 f"inter_msgs={t['inter_msgs']:5d} "
                 f"inter_bytes={t['inter_bytes']:8d}"
                 + (f" R={lv.R.strategy} P={lv.P.strategy}" if lv.R else "")
@@ -468,6 +502,50 @@ class DistributedHierarchy:
                 tracer.record_plan(lv.A.coll.plan, secs,
                                    label=f"amg/L{lv.index}")
             out.append((lv.index, lv.A.strategy, secs))
+        return out
+
+    def measure_spmv_seconds(
+        self, iters: int = 10, warmup: int = 2, tracer=None
+    ) -> List[Tuple[int, str, str, float]]:
+        """Measured per-level wall time of the full jitted distributed SpMV
+        (exchange + kernel, under whatever overlap schedule each level
+        selected); returns [(level, kernel variant, overlap mode, seconds)].
+
+        When ``tracer`` is given, levels with an exchange are recorded
+        against their plan with ``pure_exchange=False``: these timings
+        include kernel compute (like the MoE dispatch rows), so
+        ``merged_rate_samples(pure_only=True)`` must keep them out of the
+        exchange-rate calibration fit.
+        """
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(0)
+        out = []
+        for k, lv in enumerate(self.levels):
+            fn = jax.jit(self._Amv[k])
+            x = jnp.asarray(
+                rng.normal(
+                    size=(self.topo.n_procs, lv.A.ell.in_pad)
+                ).astype(self.dtype)
+            )
+            for _ in range(warmup + 1):
+                fn(x).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                y = fn(x)
+            y.block_until_ready()
+            secs = (time.perf_counter() - t0) / iters
+            if tracer is not None and lv.A.ell.ghost_pad:
+                tracer.record_plan(
+                    lv.A.coll.plan, secs,
+                    label=f"amg/L{lv.index}/spmv", pure_exchange=False,
+                )
+            out.append(
+                (lv.index, lv.A.kernel_variant, lv.A.overlap_mode, secs)
+            )
         return out
 
     def _bind_exchange_only(self, op: DistOp) -> Callable:

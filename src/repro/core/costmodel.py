@@ -125,6 +125,88 @@ def init_time(plan: CommPlan, params: MachineParams,
 
 
 # ---------------------------------------------------------------------------
+# Exchange/compute overlap terms.
+#
+# The split SpMV schedule (sparse.device.make_distributed_spmv(overlap=True))
+# runs the local-bucket matvec while the NeighborAlltoallV is in flight, so
+# of a modeled exchange time tx only max(0, tx - tl) stays exposed, where tl
+# is the local compute time.  The compute side is the same roofline
+# arithmetic as benchmarks/roofline_report.py (which imports these
+# constants): HBM-bound sparse streams vs VPU multiply-add throughput.
+# ---------------------------------------------------------------------------
+
+#: v5e HBM bandwidth and VPU f32 multiply-add throughput (per chip).
+V5E_HBM_BW = 819e9
+V5E_VPU_FLOPS = 1.97e12 / 4
+
+#: Fixed cost of one extra kernel dispatch (the overlap split adds one).
+KERNEL_LAUNCH_S = 2e-6
+
+_IDX_BYTES = 4  # int32 column indices
+
+
+def spmv_compute_time(
+    nnz: int,
+    rows: int,
+    x_len: int,
+    value_bytes: int = 8,
+    hbm_bw: float = V5E_HBM_BW,
+    vpu_flops: float = V5E_VPU_FLOPS,
+) -> float:
+    """Roofline compute time of one per-device ELL matvec phase: stream
+    nnz (cols + vals) + x + y through HBM, 2 flops per nonzero."""
+    bytes_moved = (
+        nnz * (_IDX_BYTES + value_bytes)
+        + x_len * value_bytes
+        + rows * value_bytes
+    )
+    flops = 2.0 * nnz
+    return max(bytes_moved / hbm_bw, flops / vpu_flops)
+
+
+def overlap_split_overhead(
+    rows: int,
+    value_bytes: int = 8,
+    hbm_bw: float = V5E_HBM_BW,
+    launch_s: float = KERNEL_LAUNCH_S,
+) -> float:
+    """Cost of splitting the SpMV into local + ghost phases: the carried
+    partial output makes one extra HBM round trip (write then read of
+    ``rows`` values), plus one extra kernel launch."""
+    return launch_s + 2.0 * rows * value_bytes / hbm_bw
+
+
+def modeled_fine_exchange_time(
+    n_neighbors: int,
+    ghost_values: int,
+    value_bytes: int = 8,
+    params: MachineParams = TPU_V5E,
+) -> float:
+    """Postal-model exchange time of an analytic paper-scale fine level
+    (``n_neighbors`` inter-region messages carrying ``ghost_values`` values
+    in total) — for benchmark rows where the matrix is never materialized
+    and no plan exists to run :func:`plan_time` on."""
+    return (
+        n_neighbors * params.alpha_inter
+        + ghost_values * value_bytes / params.beta_inter
+    )
+
+
+def exposed_exchange_seconds(exchange_s: float, local_s: float) -> float:
+    """Exchange time left exposed when local compute runs concurrently."""
+    return max(0.0, float(exchange_s) - float(local_s))
+
+
+def hidden_fraction(exchange_s: float, local_s: float) -> float:
+    """Fraction of the exchange hidden behind local compute (0 when there
+    is no exchange)."""
+    tx = float(exchange_s)
+    if tx <= 0.0:
+        return 0.0
+    return min(tx, float(local_s)) / tx
+
+
+# ---------------------------------------------------------------------------
 # Fit-from-samples: turn measured exchange timings into a MachineParams.
 #
 # The max-rate model is piecewise linear in

@@ -26,3 +26,24 @@ def spmv_ell_blocked_ref(
         K,
     )
     return jnp.sum(vals * x[cols + base[None, :]], axis=1)
+
+
+def spmv_ell_blocked_partial_ref(
+    cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray, y0: jnp.ndarray,
+    bucket_lo: int, bucket_hi: int, block_cols: int, n_buckets: int,
+):
+    """Oracle for :func:`spmv_ell_blocked_partial`: accumulate buckets
+    [lo, hi) of the full [R, C*K] layout into a carried ``y0``.  ``x``
+    covers exactly that range ((hi-lo) * block_cols entries)."""
+    lo, hi = int(bucket_lo), int(bucket_hi)
+    if hi <= lo:
+        return y0
+    K = cols.shape[1] // int(n_buckets)
+    sl_cols = cols[:, lo * K: hi * K]
+    sl_vals = vals[:, lo * K: hi * K]
+    base = jnp.repeat(
+        jnp.arange(hi - lo, dtype=cols.dtype)
+        * jnp.asarray(block_cols, cols.dtype),
+        K,
+    )
+    return y0 + jnp.sum(sl_vals * x[sl_cols + base[None, :]], axis=1)

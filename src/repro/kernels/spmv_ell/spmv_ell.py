@@ -22,6 +22,21 @@ padding entries pointing at a zero slot.  Two execution paths:
   so ``cols``/``vals`` are [R, C*K] with bucket ``j`` occupying columns
   [j*K, (j+1)*K) and referencing only x[j*bc:(j+1)*bc).
 
+* :func:`spmv_ell_blocked_partial` — the blocked kernel restricted to a
+  bucket range [lo, hi), accumulating into a *carried* output.  This is
+  the overlap building block: the distributed SpMV runs the local buckets
+  while the halo exchange is in flight, then consumes the ghost buckets
+  from the carried partial result (``repro.sparse.device.
+  make_distributed_spmv(..., overlap=True)``).
+
+* :func:`spmv_ell_blocked_skip` — the blocked kernel driven by per-row-
+  block bucket *lists* via scalar prefetch: grid step (i, j) visits bucket
+  ``bucket_lists[i, j]`` and steps past ``bucket_counts[i]`` are masked,
+  so banded operators stream only the buckets a row block actually
+  touches instead of every bucket.  Shares the carried-output convention
+  with the partial kernel so the overlap schedule can use either per
+  phase.
+
 Row counts need not divide ``block_rows``: the trailing row block is padded
 (col 0 / val 0 — the product is exactly zero) and the padding rows are
 sliced off the output.
@@ -148,3 +163,163 @@ def spmv_ell_blocked(
         ),
         interpret=interpret,
     )(cols, vals, x[:, None])[:R, 0]
+
+
+def _pad_vec(y: jnp.ndarray, n: int) -> jnp.ndarray:
+    if y.shape[0] == n:
+        return y
+    return jnp.concatenate([y, jnp.zeros((n - y.shape[0],), y.dtype)])
+
+
+def _spmv_blocked_partial_kernel(cols_ref, vals_ref, x_ref, y0_ref, y_ref):
+    j = pl.program_id(1)
+    cols = cols_ref[...]          # [BR, K] in-bucket indices (< block_cols)
+    vals = vals_ref[...]          # [BR, K]
+    x = x_ref[...]                # [BC, 1] — this bucket's x slice
+    partial = jnp.sum(vals * x[cols, 0], axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = y0_ref[...] + partial
+
+    @pl.when(j > 0)
+    def _accumulate():
+        y_ref[...] = y_ref[...] + partial
+
+
+def spmv_ell_blocked_partial(
+    cols: jnp.ndarray,   # [R, C*K] full bucketed layout (all buckets)
+    vals: jnp.ndarray,   # [R, C*K]
+    x: jnp.ndarray,      # [(hi-lo) * block_cols] — ONLY the range's x slices
+    y0: jnp.ndarray,     # [R] carried output, accumulated into
+    *,
+    bucket_lo: int,
+    bucket_hi: int,
+    n_buckets: int,
+    block_cols: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked SpMV over buckets [bucket_lo, bucket_hi), accumulating into a
+    carried ``y0``: y = y0 + sum_{j in [lo,hi)} A_bucket_j @ x_bucket_j.
+
+    This is the overlap building block: the distributed schedule runs the
+    local-bucket range while the halo exchange is in flight, then a second
+    call consumes the ghost-bucket range with the local partial as ``y0``.
+    ``cols``/``vals`` stay the full [R, C*K] layout (the BlockSpec index map
+    offsets into it); ``x`` covers exactly the requested range.
+    """
+    R = cols.shape[0]
+    lo, hi = int(bucket_lo), int(bucket_hi)
+    C = int(n_buckets)
+    bc = int(block_cols)
+    if not (0 <= lo <= hi <= C):
+        raise ValueError(f"bucket range [{lo}, {hi}) outside [0, {C})")
+    if hi == lo:
+        return y0
+    assert x.shape[0] == (hi - lo) * bc, (x.shape, hi - lo, bc)
+    assert cols.shape[1] % C == 0, (cols.shape, C)
+    K = cols.shape[1] // C
+    cols, vals, br = _pad_rows(cols, vals, block_rows)
+    Rp = cols.shape[0]
+    y0p = _pad_vec(y0, Rp)
+    return pl.pallas_call(
+        _spmv_blocked_partial_kernel,
+        grid=(Rp // br, hi - lo),
+        in_specs=[
+            pl.BlockSpec((br, K), lambda i, j: (i, j + lo)),
+            pl.BlockSpec((br, K), lambda i, j: (i, j + lo)),
+            pl.BlockSpec((bc, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), vals.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cols, vals, x[:, None], y0p[:, None])[:R, 0]
+
+
+def _spmv_blocked_skip_kernel(bl_ref, cnt_ref, cols_ref, vals_ref, x_ref,
+                              y0_ref, y_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    cols = cols_ref[...]          # [BR, K] — bucket bl_ref[i, j]'s columns
+    vals = vals_ref[...]          # [BR, K]
+    x = x_ref[...]                # [BC, 1] — bucket bl_ref[i, j]'s x slice
+    partial = jnp.sum(vals * x[cols, 0], axis=1, keepdims=True)
+    # steps past the row block's live-bucket count revisit a padding entry
+    # of the list; mask their contribution to exactly zero
+    live = (j < cnt_ref[i]).astype(vals.dtype)
+    contrib = live * partial
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = y0_ref[...] + contrib
+
+    @pl.when(j > 0)
+    def _accumulate():
+        y_ref[...] = y_ref[...] + contrib
+
+
+def spmv_ell_blocked_skip(
+    cols: jnp.ndarray,           # [R, C*K] full bucketed layout
+    vals: jnp.ndarray,           # [R, C*K]
+    x: jnp.ndarray,              # [n_x_buckets * block_cols]
+    bucket_lists: jnp.ndarray,   # [NRB, M] int32 absolute bucket ids
+    bucket_counts: jnp.ndarray,  # [NRB] int32 live entries per row block
+    *,
+    n_buckets: int,
+    block_cols: int,
+    bucket_base: int = 0,
+    y0: jnp.ndarray | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Bucket-skipping blocked SpMV: grid step (i, j) visits bucket
+    ``bucket_lists[i, j]`` of row block ``i`` (scalar-prefetched, so the
+    BlockSpec index maps are data-dependent); steps j >= bucket_counts[i]
+    are masked to zero contribution.  Banded operators whose row blocks
+    touch few buckets stream only those, instead of every bucket.
+
+    ``x`` covers buckets [bucket_base, bucket_base + len(x)/block_cols);
+    every listed (and padding) bucket id must fall in that window.  With
+    ``y0`` the result accumulates into a carried output, so the kernel
+    serves both the fused path (base 0, full x) and either phase of the
+    overlap schedule (local range, then ghost range carrying y).
+    """
+    R = cols.shape[0]
+    C = int(n_buckets)
+    bc = int(block_cols)
+    base = int(bucket_base)
+    assert cols.shape[1] % C == 0, (cols.shape, C)
+    K = cols.shape[1] // C
+    cols, vals, br = _pad_rows(cols, vals, block_rows)
+    Rp = cols.shape[0]
+    nrb = Rp // br
+    assert bucket_lists.shape[0] == nrb, (bucket_lists.shape, nrb, br)
+    M = bucket_lists.shape[1]
+    y0p = (jnp.zeros((Rp,), vals.dtype) if y0 is None
+           else _pad_vec(y0, Rp).astype(vals.dtype))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nrb, M),
+        in_specs=[
+            pl.BlockSpec((br, K), lambda i, j, bl, cnt: (i, bl[i, j])),
+            pl.BlockSpec((br, K), lambda i, j, bl, cnt: (i, bl[i, j])),
+            pl.BlockSpec((bc, 1), lambda i, j, bl, cnt: (bl[i, j] - base, 0)),
+            pl.BlockSpec((br, 1), lambda i, j, bl, cnt: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j, bl, cnt: (i, 0)),
+    )
+    return pl.pallas_call(
+        _spmv_blocked_skip_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), vals.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(bucket_lists.astype(jnp.int32), bucket_counts.astype(jnp.int32),
+      cols, vals, x[:, None], y0p[:, None])[:R, 0]

@@ -35,9 +35,17 @@ Entry points:
 * :func:`select_spmv_kernel` — modeled-VMEM flat-vs-blocked choice
   (threshold overridable via ``REPRO_SPMV_VMEM_LIMIT_BYTES`` or argument);
 * :func:`make_distributed_spmv` — build ``fn(x [P, in_pad]) -> y [P,
-  row_pad]`` composing exchange + ELL matvec(s) for either layout (jit it,
-  or fuse into a larger jitted program — that is how exchange/compute
-  overlap materializes);
+  row_pad]`` composing exchange + ELL matvec(s) for either layout.  With
+  ``overlap=True`` the schedule is split: the exchange is issued first,
+  the local buckets (which do not depend on it) accumulate while the
+  ``NeighborAlltoallV`` rounds are in flight, and a second carried-output
+  kernel consumes the ghost buckets — structured so XLA's async collective
+  latency hiding can actually overlap the two;
+* :func:`select_spmv_overlap` — cost-model overlap on/off choice
+  (:class:`OverlapSelection`), the Section-5-style companion of
+  :func:`select_spmv_kernel`;
+* :func:`row_block_bucket_map` — per-row-block live-bucket lists for the
+  bucket-skipping kernel (shared by the fused and overlapped schedules);
 * :func:`distributed_spmv` — one-shot convenience on a numpy vector.
 """
 from __future__ import annotations
@@ -352,6 +360,147 @@ def select_spmv_kernel(
     return KernelSelection(variant, flat, blocked, limit, forced=True)
 
 
+def row_block_bucket_map(
+    ell: DeviceEllBlocked,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    bucket_lo: int = 0,
+    bucket_hi: Optional[int] = None,
+) -> tuple:
+    """Per-row-block live-bucket lists for the bucket-skipping kernel.
+
+    Returns ``(lists [P, NRB, M] int32, counts [P, NRB] int32)`` where row
+    block ``i`` of process ``p`` touches exactly the buckets
+    ``lists[p, i, :counts[p, i]]`` (absolute bucket ids, ascending) within
+    the window [bucket_lo, bucket_hi).  ``M`` is the global max count
+    (min 1); padding entries hold ``bucket_lo`` and are masked by the
+    kernel.  The row blocking mirrors the kernel's
+    (``min(block_rows, row_pad)`` with a padded trailing block), so the
+    lists line up with its grid.  The overlap schedule builds one map per
+    phase from the same call with the phase's bucket window.
+    """
+    C, K = ell.n_buckets, ell.K
+    lo = int(bucket_lo)
+    hi = C if bucket_hi is None else int(bucket_hi)
+    assert 0 <= lo < hi <= C, (lo, hi, C)
+    R = ell.row_pad
+    br = min(int(block_rows), R)
+    pad = (-R) % br
+    nrb = (R + pad) // br
+    W = hi - lo
+    live = (ell.vals.reshape(ell.n_procs, R, C, K) != 0).any(-1)[:, :, lo:hi]
+    if pad:
+        live = np.concatenate(
+            [live, np.zeros((ell.n_procs, pad, W), bool)], axis=1
+        )
+    live_rb = live.reshape(ell.n_procs, nrb, br, W).any(2)   # [P, NRB, W]
+    counts = live_rb.sum(-1).astype(np.int32)
+    M = max(int(counts.max()), 1)
+    lists = np.full((ell.n_procs, nrb, M), lo, dtype=np.int32)
+    for p in range(ell.n_procs):
+        for rb in range(nrb):
+            idx = np.flatnonzero(live_rb[p, rb])
+            lists[p, rb, : len(idx)] = idx + lo
+    return lists, counts
+
+
+@dataclass(frozen=True)
+class OverlapSelection:
+    """The exchange/compute-overlap choice for one operator, recorded on
+    ``DistOp`` next to the Section-5 transport and flat-vs-blocked kernel
+    selections.  Times are cost-model estimates unless the caller passed a
+    measured exchange time."""
+
+    mode: str              # "on" | "off"
+    exchange_s: float      # exchange time tx (full collective)
+    local_s: float         # local-bucket compute time tl
+    exposed_s: float       # exchange time left exposed by this choice
+    hidden_frac: float     # fraction of tx hidden behind local compute
+    overhead_s: float      # split cost (carried-y traffic + extra launch)
+    forced: bool = False   # True when the mode was pinned, not selected
+
+    def __str__(self) -> str:
+        how = "forced" if self.forced else "auto"
+        return (
+            f"overlap={self.mode} ({how}) "
+            f"tx={self.exchange_s * 1e6:.1f}us "
+            f"local={self.local_s * 1e6:.1f}us "
+            f"exposed={self.exposed_s * 1e6:.1f}us "
+            f"hidden={self.hidden_frac:.0%} "
+            f"overhead={self.overhead_s * 1e6:.1f}us"
+        )
+
+
+def overlap_decision(
+    exchange_s: float,
+    local_s: float,
+    *,
+    rows: int,
+    value_bytes: int = 8,
+    mode: str = "auto",
+    has_ghost: bool = True,
+) -> OverlapSelection:
+    """Decide overlap on/off from an exchange time and a local compute time.
+
+    The split schedule hides ``min(tx, tl)`` of the exchange but pays
+    ``overlap_split_overhead`` (the carried output makes one extra HBM
+    round trip, plus a kernel launch).  ``auto`` turns overlap on iff the
+    hidden time beats that overhead; a fully local operator (no ghosts)
+    has nothing to hide and is always ``off``.
+    """
+    from ..core.costmodel import (
+        exposed_exchange_seconds,
+        hidden_fraction,
+        overlap_split_overhead,
+    )
+
+    tx, tl = float(exchange_s), float(local_s)
+    overhead = overlap_split_overhead(rows, value_bytes=value_bytes)
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(f"unknown overlap mode {mode!r}")
+    if mode == "auto":
+        on = has_ghost and (tx - exposed_exchange_seconds(tx, tl)) > overhead
+    else:
+        on = mode == "on" and has_ghost
+    if on:
+        return OverlapSelection(
+            "on", tx, tl, exposed_exchange_seconds(tx, tl),
+            hidden_fraction(tx, tl), overhead, forced=(mode != "auto"),
+        )
+    return OverlapSelection(
+        "off", tx, tl, tx if has_ghost else 0.0, 0.0, overhead,
+        forced=(mode != "auto"),
+    )
+
+
+def select_spmv_overlap(
+    part: PartitionedCSR,
+    exchange_seconds: float,
+    *,
+    mode: str = "auto",
+    value_bytes: int = 8,
+) -> OverlapSelection:
+    """Choose the overlap schedule for one partitioned operator.
+
+    ``exchange_seconds`` is the modeled (``core.costmodel.plan_time``) or
+    measured full-exchange time; the local compute time comes from the
+    roofline compute model over the worst per-process local block.
+    """
+    from ..core.costmodel import spmv_compute_time
+
+    row_pad = int(np.diff(part.offsets).max())
+    in_pad = int(np.diff(part.col_offsets).max())
+    ghost_pad = int(max((len(n) for n in part.needs), default=0))
+    nnz_local = max((m.nnz for m in part.local), default=0)
+    local_s = spmv_compute_time(
+        nnz_local, row_pad, in_pad, value_bytes=value_bytes
+    )
+    return overlap_decision(
+        float(exchange_seconds), local_s, rows=row_pad,
+        value_bytes=value_bytes, mode=mode, has_ghost=ghost_pad > 0,
+    )
+
+
 def partitioned_to_device(
     part: PartitionedCSR,
     selection: KernelSelection,
@@ -390,6 +539,7 @@ def make_distributed_spmv(
     mesh,
     axis_name: str,
     exchange: Optional[Callable] = None,
+    overlap: bool = False,
 ) -> Callable:
     """Build the device distributed SpMV ``fn(x [P, in_pad]) -> [P, row_pad]``.
 
@@ -402,9 +552,20 @@ def make_distributed_spmv(
     ghost values are concatenated into the bucketed gather space and one
     accumulating kernel covers both (ghost buckets trail, so halo-dependent
     work lands in the last accumulation steps).
+
+    ``overlap=True`` splits the schedule into (local matvec || exchange)
+    followed by a carried-output ghost matvec: the exchange is issued
+    first, the local phase takes no data from it, and only the final phase
+    consumes the ghost values — the dependence structure XLA's async
+    collective scheduling needs to hide the ``NeighborAlltoallV`` rounds
+    behind the local compute.  Both phases accumulate buckets in the same
+    ascending order as the fused schedule.  No-ghost operators ignore the
+    flag (there is nothing to overlap).
     """
     if isinstance(ell, DeviceEllBlocked):
-        return _make_distributed_spmv_blocked(ell, mesh, axis_name, exchange)
+        return _make_distributed_spmv_blocked(
+            ell, mesh, axis_name, exchange, overlap
+        )
 
     import jax
     import jax.numpy as jnp
@@ -423,6 +584,35 @@ def make_distributed_spmv(
                   ell.ghost_cols, ell.ghost_vals)
     ]
     has_ghost = ell.ghost_pad > 0
+
+    if overlap and has_ghost:
+        def per_device_local(x_blk, lc, lv):
+            x = jnp.concatenate(
+                [x_blk[0], jnp.zeros((1,), x_blk.dtype)]
+            )  # sentinel slot at index in_pad
+            return spmv(lc[0], lv[0], x)[None]
+
+        def per_device_ghost(y_blk, gh_blk, gc, gv):
+            gh = jnp.concatenate(
+                [gh_blk[0], jnp.zeros((1,), gh_blk.dtype)]
+            )
+            return (y_blk[0] + spmv(gc[0], gv[0], gh))[None]
+
+        mm_local = shard_map(
+            per_device_local, mesh=mesh, in_specs=(spec,) * 3,
+            out_specs=spec, check_rep=False,
+        )
+        mm_ghost = shard_map(
+            per_device_ghost, mesh=mesh, in_specs=(spec,) * 4,
+            out_specs=spec, check_rep=False,
+        )
+
+        def spmv_fn(x):
+            gh = exchange(x[..., None])[..., 0]   # issued before local work
+            y = mm_local(x, *consts[:2])          # no data dep on gh
+            return mm_ghost(y, gh, *consts[2:])
+
+        return spmv_fn
 
     def per_device(x_blk, gh_blk, lc, lv, gc, gv):
         # blocks arrive with a leading device dim of 1
@@ -460,41 +650,132 @@ def _make_distributed_spmv_blocked(
     mesh,
     axis_name: str,
     exchange: Optional[Callable] = None,
+    overlap: bool = False,
 ) -> Callable:
-    """Blocked-layout counterpart of :func:`make_distributed_spmv`."""
+    """Blocked-layout counterpart of :func:`make_distributed_spmv`.
+
+    Both the fused and the overlapped schedule go through the
+    bucket-skipping kernel whenever :func:`row_block_bucket_map` shows at
+    least one row block skipping at least one bucket of its window (banded
+    operators touch few buckets per row block); otherwise the dense
+    blocked/partial kernels stream every bucket.
+    """
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..compat import shard_map
-    from ..kernels.spmv_ell.ops import spmv_blocked
+    from ..kernels.spmv_ell.ops import (
+        spmv_blocked,
+        spmv_blocked_partial,
+        spmv_blocked_skip,
+    )
 
     if ell.ghost_pad and exchange is None:
         raise ValueError("operator has ghost columns: exchange required")
 
     spec = P(axis_name)
-    consts = [
-        jax.device_put(a, NamedSharding(mesh, spec))
-        for a in (ell.cols, ell.vals)
-    ]
+
+    def shard(a):
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    consts = [shard(ell.cols), shard(ell.vals)]
     has_ghost = ell.ghost_pad > 0
     bc = ell.block_cols
-    local_fill = ell.n_local_buckets * bc - ell.in_pad
+    C, Cl = ell.n_buckets, ell.n_local_buckets
+    local_fill = Cl * bc - ell.in_pad
     ghost_fill = ell.n_ghost_buckets * bc - ell.ghost_pad
 
-    def per_device(x_blk, gh_blk, cols, vals):
+    if overlap and has_ghost:
+        llists, lcounts = row_block_bucket_map(ell, bucket_hi=Cl)
+        glists, gcounts = row_block_bucket_map(ell, bucket_lo=Cl)
+        local_skip = llists.shape[2] < Cl
+        ghost_skip = glists.shape[2] < C - Cl
+        consts_l = consts + (
+            [shard(llists), shard(lcounts)] if local_skip else []
+        )
+        consts_g = consts + (
+            [shard(glists), shard(gcounts)] if ghost_skip else []
+        )
+
+        def per_device_local(x_blk, cols, vals, *sk):
+            xl = jnp.concatenate(
+                [x_blk[0], jnp.zeros((local_fill,), x_blk.dtype)]
+            )
+            if local_skip:
+                bl, cnt = sk
+                y = spmv_blocked_skip(
+                    cols[0], vals[0], xl, bl[0], cnt[0],
+                    n_buckets=C, block_cols=bc,
+                )
+            else:
+                y0 = jnp.zeros((ell.row_pad,), x_blk.dtype)
+                y = spmv_blocked_partial(
+                    cols[0], vals[0], xl, y0,
+                    bucket_lo=0, bucket_hi=Cl, n_buckets=C, block_cols=bc,
+                )
+            return y[None]
+
+        def per_device_ghost(y_blk, gh_blk, cols, vals, *sk):
+            xg = jnp.concatenate(
+                [gh_blk[0], jnp.zeros((ghost_fill,), gh_blk.dtype)]
+            )
+            if ghost_skip:
+                bl, cnt = sk
+                y = spmv_blocked_skip(
+                    cols[0], vals[0], xg, bl[0], cnt[0],
+                    n_buckets=C, block_cols=bc, bucket_base=Cl, y0=y_blk[0],
+                )
+            else:
+                y = spmv_blocked_partial(
+                    cols[0], vals[0], xg, y_blk[0],
+                    bucket_lo=Cl, bucket_hi=C, n_buckets=C, block_cols=bc,
+                )
+            return y[None]
+
+        mm_local = shard_map(
+            per_device_local, mesh=mesh,
+            in_specs=(spec,) * (3 + 2 * local_skip),
+            out_specs=spec, check_rep=False,
+        )
+        mm_ghost = shard_map(
+            per_device_ghost, mesh=mesh,
+            in_specs=(spec,) * (4 + 2 * ghost_skip),
+            out_specs=spec, check_rep=False,
+        )
+
+        def spmv_fn(x):
+            gh = exchange(x[..., None])[..., 0]   # issued before local work
+            y = mm_local(x, *consts_l)            # no data dep on gh
+            return mm_ghost(y, gh, *consts_g)
+
+        return spmv_fn
+
+    lists, counts = row_block_bucket_map(ell)
+    use_skip = lists.shape[2] < C
+    if use_skip:
+        consts += [shard(lists), shard(counts)]
+
+    def per_device(x_blk, gh_blk, cols, vals, *sk):
         x = x_blk[0]
         parts = [x, jnp.zeros((local_fill,), x.dtype)]
         if has_ghost:
             parts += [gh_blk[0], jnp.zeros((ghost_fill,), x.dtype)]
         xcat = jnp.concatenate(parts)     # [n_buckets * block_cols]
-        y = spmv_blocked(cols[0], vals[0], xcat, bc)
+        if use_skip:
+            bl, cnt = sk
+            y = spmv_blocked_skip(
+                cols[0], vals[0], xcat, bl[0], cnt[0],
+                n_buckets=C, block_cols=bc,
+            )
+        else:
+            y = spmv_blocked(cols[0], vals[0], xcat, bc)
         return y[None]
 
     mm = shard_map(
         per_device,
         mesh=mesh,
-        in_specs=(spec,) * 4,
+        in_specs=(spec,) * (4 + 2 * use_skip),
         out_specs=spec,
         check_rep=False,
     )
@@ -518,11 +799,14 @@ def distributed_spmv(
     dtype=np.float64,
     variant: str = "flat",
     block_cols: int = DEFAULT_BLOCK_COLS,
+    overlap: str = "off",
 ) -> np.ndarray:
     """One-shot device distributed SpMV of a numpy vector (convenience).
 
     ``variant`` is ``"flat"``, ``"blocked"``, or ``"auto"`` (modeled-VMEM
-    selection).  For repeated products build the function once with
+    selection); ``overlap`` is ``"on"``, ``"off"``, or ``"auto"``
+    (cost-model split-schedule selection against the plan's modeled
+    exchange time).  For repeated products build the function once with
     :func:`make_distributed_spmv` and jit it.
     """
     import jax
@@ -530,7 +814,19 @@ def distributed_spmv(
     sel = select_spmv_kernel(part, variant=variant, block_cols=block_cols)
     ell = partitioned_to_device(part, sel, dtype, block_cols)
     exchange = coll.bind(mesh, axis_name) if ell.ghost_pad else None
-    fn = jax.jit(make_distributed_spmv(ell, mesh, axis_name, exchange))
+    if overlap == "auto":
+        from ..core.costmodel import TPU_V5E, plan_time
+
+        osel = select_spmv_overlap(part, plan_time(coll.plan, TPU_V5E))
+        ov = osel.mode == "on"
+    else:
+        osel = None
+        if overlap not in ("on", "off"):
+            raise ValueError(f"unknown overlap mode {overlap!r}")
+        ov = overlap == "on" and ell.ghost_pad > 0
+    fn = jax.jit(
+        make_distributed_spmv(ell, mesh, axis_name, exchange, overlap=ov)
+    )
     xg = pack_vector(part.col_offsets, ell.in_pad, x.astype(dtype))
     y = fn(xg)
     return unpack_vector(part.offsets, np.asarray(y))

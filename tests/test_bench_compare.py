@@ -79,6 +79,32 @@ def test_measured_band_is_generous_but_bounded():
     assert compare(payload([MODELED, MEASURED]), relabeled)["status"] == "ok"
 
 
+def _overlap_row(frac, us=900.0):
+    return ("spmv_overlap/measured/on", us,
+            f"kind=measured-device|overlap=on|exposed_frac={frac:.4f}|")
+
+
+def test_overlap_exposed_frac_gate():
+    """Measured spmv_overlap rows gate exposed_frac one-sidedly."""
+    base = payload([MODELED, _overlap_row(0.10)])
+    # small wobble within tolerance: ok
+    assert compare(base, payload([MODELED, _overlap_row(0.40)]),
+                   overlap_frac_tol=0.6)["status"] == "ok"
+    # regression beyond tolerance: fail
+    diff = compare(base, payload([MODELED, _overlap_row(0.95)]),
+                   overlap_frac_tol=0.6)
+    assert any(r["what"] == "overlap-exposed-frac-regressed"
+               for r in diff["regressions"])
+    # one-sided: improving (or dropping to zero) never fails
+    assert compare(payload([MODELED, _overlap_row(0.95)]),
+                   payload([MODELED, _overlap_row(0.0)]),
+                   overlap_frac_tol=0.6)["status"] == "ok"
+    # rows without the field (exchange / kernel_only) are not gated
+    bare = ("spmv_overlap/measured/exchange", 800.0,
+            "kind=measured-device|rows=4096|")
+    assert compare(payload([bare]), payload([bare]))["status"] == "ok"
+
+
 def test_measured_inside_modeled_rows_exempt():
     """measured_* fields inside deterministic rows are informational."""
     base = payload([("fig/a", 100.0,

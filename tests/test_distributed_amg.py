@@ -48,3 +48,17 @@ def test_blocked_spmv_hierarchy_matches_host():
     assert "forced-blocked residual history OK" in out
     assert "auto mixed-variant residual history OK" in out
     assert "kern=blocked" in out and "kern=flat" in out
+
+
+def test_overlap_spmv_hierarchy_matches_host():
+    """Exchange/compute-overlapped schedule end to end: forced-overlap
+    hierarchies (flat + blocked kernels) track the host solver, auto
+    records its per-level decision, and measured SpMV timings are tagged
+    non-pure for calibration."""
+    out = run_prog("check_overlap_spmv.py")
+    assert "ALL_OK" in out
+    assert "forced-overlap flat residual history OK" in out
+    assert "forced-overlap blocked residual history OK" in out
+    assert "auto-overlap residual history OK" in out
+    assert "ov=off" in out
+    assert "measure_spmv_seconds OK" in out

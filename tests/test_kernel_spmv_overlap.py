@@ -1,0 +1,164 @@
+"""Partial (bucket-range, carried-output) and bucket-skipping blocked SpMV
+kernels vs oracles — the kernel substrate of the exchange/compute-overlap
+schedule.  All Pallas calls run in interpret mode (CPU CI)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.amg import diffusion_2d
+from repro.kernels.spmv_ell import (
+    spmv_ell_blocked_partial_ref,
+    spmv_ell_blocked_ref,
+)
+from repro.kernels.spmv_ell.spmv_ell import (
+    spmv_ell_blocked,
+    spmv_ell_blocked_partial,
+    spmv_ell_blocked_skip,
+)
+from repro.sparse import (
+    partition_csr,
+    partitioned_to_ell_blocked,
+    row_block_bucket_map,
+)
+
+
+def _random_bucketed(rng, R, C, K, bc, dtype=np.float32, empty=()):
+    """Random bucketed ELL layout; buckets in ``empty`` hold all zeros."""
+    cols = rng.integers(0, bc, size=(R, C * K)).astype(np.int32)
+    vals = rng.normal(size=(R, C * K)).astype(dtype)
+    for j in empty:
+        vals[:, j * K: (j + 1) * K] = 0.0
+    x = rng.normal(size=C * bc).astype(dtype)
+    return jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x)
+
+
+@pytest.mark.parametrize("R,C,K,bc,br", [(64, 5, 4, 16, 16),
+                                         (97, 5, 3, 32, 32),   # prime R
+                                         (128, 2, 6, 64, 32)])
+@pytest.mark.parametrize("lo,hi", [(0, 1), (1, 2), (0, 2), (2, 2)])
+def test_partial_vs_ref(R, C, K, bc, br, lo, hi):
+    """Carried-output partial kernel vs its oracle on every bucket range
+    (including the empty range, which must return y0 exactly)."""
+    rng = np.random.default_rng(6)
+    cols, vals, x = _random_bucketed(rng, R, C, K, bc)
+    y0 = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    xs = x[lo * bc: hi * bc]
+    want = spmv_ell_blocked_partial_ref(cols, vals, xs, y0, lo, hi, bc, C)
+    got = spmv_ell_blocked_partial(
+        cols, vals, xs, y0, bucket_lo=lo, bucket_hi=hi, n_buckets=C,
+        block_cols=bc, block_rows=br, interpret=True,
+    )
+    assert got.shape == (R,)
+    if hi == lo:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(y0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("R,C,K,bc,br,split", [(64, 5, 4, 16, 16, 3),
+                                               (97, 4, 3, 32, 32, 1),
+                                               (128, 3, 6, 64, 32, 2)])
+def test_partial_composition_equals_full(R, C, K, bc, br, split):
+    """local buckets [0, split) then ghost buckets [split, C) carried on
+    top — the overlap schedule's two phases — must equal the one-shot
+    blocked kernel and its oracle."""
+    rng = np.random.default_rng(7)
+    cols, vals, x = _random_bucketed(rng, R, C, K, bc)
+    full = spmv_ell_blocked(cols, vals, x, block_cols=bc, block_rows=br,
+                            interpret=True)
+    want = spmv_ell_blocked_ref(cols, vals, x, bc)
+    y_local = spmv_ell_blocked_partial(
+        cols, vals, x[: split * bc], jnp.zeros((R,), vals.dtype),
+        bucket_lo=0, bucket_hi=split, n_buckets=C, block_cols=bc,
+        block_rows=br, interpret=True,
+    )
+    y = spmv_ell_blocked_partial(
+        cols, vals, x[split * bc:], y_local,
+        bucket_lo=split, bucket_hi=C, n_buckets=C, block_cols=bc,
+        block_rows=br, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("empty", [(), (1,), (0, 2, 4)])
+def test_skip_vs_ref_with_empty_buckets(empty):
+    """Bucket-skipping kernel (scalar-prefetched per-row-block bucket
+    lists) vs the dense oracle; zero buckets may be skipped entirely."""
+    R, C, K, bc, br = 64, 5, 4, 16, 16
+    rng = np.random.default_rng(8)
+    cols, vals, x = _random_bucketed(rng, R, C, K, bc, empty=empty)
+    want = spmv_ell_blocked_ref(cols, vals, x, bc)
+
+    # host-side bucket lists: which buckets are live per row block
+    nrb = R // br
+    live = (np.asarray(vals).reshape(R, C, K) != 0).any(-1)
+    live_rb = live.reshape(nrb, br, C).any(1)
+    counts = live_rb.sum(1).astype(np.int32)
+    M = max(int(counts.max()), 1)
+    lists = np.zeros((nrb, M), np.int32)
+    for rb in range(nrb):
+        idx = np.flatnonzero(live_rb[rb])
+        lists[rb, : len(idx)] = idx
+    assert M == C - len(empty) or (M == 1 and C - len(empty) == 0)
+
+    got = spmv_ell_blocked_skip(
+        cols, vals, x, jnp.asarray(lists), jnp.asarray(counts),
+        n_buckets=C, block_cols=bc, block_rows=br, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_skip_ghost_phase_carried():
+    """Skip kernel over a trailing bucket window with bucket_base and a
+    carried y0 (the overlap schedule's ghost phase) vs the partial oracle."""
+    R, C, K, bc, br = 64, 6, 3, 16, 16
+    base = 4  # ghost buckets [4, 6)
+    rng = np.random.default_rng(9)
+    cols, vals, x = _random_bucketed(rng, R, C, K, bc)
+    y0 = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    want = spmv_ell_blocked_partial_ref(
+        cols, vals, x[base * bc:], y0, base, C, bc, C
+    )
+    nrb = R // br
+    lists = jnp.asarray(np.tile(np.arange(base, C, dtype=np.int32),
+                                (nrb, 1)))
+    counts = jnp.asarray(np.full(nrb, C - base, np.int32))
+    got = spmv_ell_blocked_skip(
+        cols, vals, x[base * bc:], lists, counts,
+        n_buckets=C, block_cols=bc, bucket_base=base, y0=y0,
+        block_rows=br, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_skip_equals_blocked_on_amg_matrix():
+    """On a real partitioned operator, the skip kernel fed by
+    row_block_bucket_map matches the dense blocked kernel (a banded
+    operator leaves most off-diagonal buckets empty)."""
+    A = diffusion_2d(24, 24)
+    part = partition_csr(A, 4)
+    bell = partitioned_to_ell_blocked(part, block_cols=32)
+    lists, counts = row_block_bucket_map(bell, block_rows=16)
+    assert lists.shape[2] < bell.n_buckets  # skipping actually engages
+    rng = np.random.default_rng(10)
+    for p in range(bell.n_procs):
+        # f32 on-device (tier-1 runs without x64): summation-order changes
+        # between dense and skipping accumulation stay within f32 rounding
+        x = rng.normal(size=bell.x_len).astype(np.float32)
+        want = spmv_ell_blocked_ref(
+            jnp.asarray(bell.cols[p]), jnp.asarray(bell.vals[p]),
+            jnp.asarray(x), bell.block_cols,
+        )
+        got = spmv_ell_blocked_skip(
+            jnp.asarray(bell.cols[p]), jnp.asarray(bell.vals[p]),
+            jnp.asarray(x), jnp.asarray(lists[p]), jnp.asarray(counts[p]),
+            n_buckets=bell.n_buckets, block_cols=bell.block_cols,
+            block_rows=16, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

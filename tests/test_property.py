@@ -15,6 +15,10 @@ Invariants under test:
   P8  Column-bucketed ELL packing + the blocked SpMV kernel agree with the
       flat kernel, the jnp oracle, and the host matvec on ANY random
       sparsity/ghost pattern.
+  P9  The overlap schedule's split execution (local buckets, then ghost
+      buckets carried on top — via both the partial and the bucket-skipping
+      kernel) equals the one-shot blocked kernel and the host matvec on ANY
+      random sparsity/ghost pattern.
 """
 import numpy as np
 import pytest
@@ -219,6 +223,82 @@ def test_p8_blocked_packing_matches_flat_and_ref(sp):
         want = want_all[int(part.offsets[p]): int(part.offsets[p + 1])]
         np.testing.assert_allclose(
             np.asarray(blocked)[:n_rows], want, rtol=1e-4, atol=1e-4
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_partitions())
+def test_p9_overlap_split_matches_blocked_and_host(sp):
+    from repro.kernels.spmv_ell.spmv_ell import (
+        spmv_ell_blocked,
+        spmv_ell_blocked_partial,
+        spmv_ell_blocked_skip,
+    )
+    from repro.sparse import (
+        partition_csr,
+        partitioned_to_ell_blocked,
+        row_block_bucket_map,
+    )
+    import jax.numpy as jnp
+
+    A, n_procs, bc, seed = sp
+    part = partition_csr(A, n_procs)
+    bell = partitioned_to_ell_blocked(part, block_cols=bc, dtype=np.float32)
+    Cl, C = bell.n_local_buckets, bell.n_buckets
+    llists, lcounts = row_block_bucket_map(bell, block_rows=8, bucket_hi=Cl)
+    if C > Cl:
+        glists, gcounts = row_block_bucket_map(bell, block_rows=8,
+                                               bucket_lo=Cl)
+    plan = build_plan(part.pattern, Topology(n_procs, 1), "standard")
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=A.ncols).astype(np.float32)
+    xs = [x[int(part.offsets[p]): int(part.offsets[p + 1])]
+          for p in range(n_procs)]
+    ghosts = plan.execute_numpy(xs)
+    want_all = A.matvec(x.astype(np.float64))
+    for p in range(n_procs):
+        n_rows = int(part.offsets[p + 1] - part.offsets[p])
+        cols = jnp.asarray(bell.cols[p])
+        vals = jnp.asarray(bell.vals[p])
+        xb = np.zeros(bell.x_len, dtype=np.float32)
+        xb[: len(xs[p])] = xs[p]
+        g0 = Cl * bc
+        xb[g0: g0 + len(ghosts[p])] = ghosts[p].astype(np.float32)
+        full = spmv_ell_blocked(
+            cols, vals, jnp.asarray(xb), block_cols=bc, block_rows=8,
+            interpret=True,
+        )
+        x_local, x_ghost = jnp.asarray(xb[:g0]), jnp.asarray(xb[g0:])
+        # split schedule via the carried-output partial kernel
+        y = spmv_ell_blocked_partial(
+            cols, vals, x_local, jnp.zeros((bell.row_pad,), vals.dtype),
+            bucket_lo=0, bucket_hi=Cl, n_buckets=C, block_cols=bc,
+            block_rows=8, interpret=True,
+        )
+        if C > Cl:
+            y = spmv_ell_blocked_partial(
+                cols, vals, x_ghost, y, bucket_lo=Cl, bucket_hi=C,
+                n_buckets=C, block_cols=bc, block_rows=8, interpret=True,
+            )
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full),
+                                   rtol=1e-5, atol=1e-6)
+        # same split via the bucket-skipping kernel
+        ys = spmv_ell_blocked_skip(
+            cols, vals, x_local, jnp.asarray(llists[p]),
+            jnp.asarray(lcounts[p]), n_buckets=C, block_cols=bc,
+            block_rows=8, interpret=True,
+        )
+        if C > Cl:
+            ys = spmv_ell_blocked_skip(
+                cols, vals, x_ghost, jnp.asarray(glists[p]),
+                jnp.asarray(gcounts[p]), n_buckets=C, block_cols=bc,
+                bucket_base=Cl, y0=ys, block_rows=8, interpret=True,
+            )
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(full),
+                                   rtol=1e-5, atol=1e-6)
+        want = want_all[int(part.offsets[p]): int(part.offsets[p + 1])]
+        np.testing.assert_allclose(
+            np.asarray(y)[:n_rows], want, rtol=1e-4, atol=1e-4
         )
 
 

@@ -12,12 +12,15 @@ from repro.core import Topology, build_plan
 from repro.sparse import (
     block_offsets,
     distributed_spmv_numpy,
+    overlap_decision,
     pack_vector,
     partition_csr,
     partition_rect_csr,
     partitioned_to_ell,
     partitioned_to_ell_blocked,
+    row_block_bucket_map,
     select_spmv_kernel,
+    select_spmv_overlap,
     spmv_blocked_vmem_bytes,
     spmv_flat_vmem_bytes,
     unpack_vector,
@@ -190,3 +193,84 @@ def test_ell_padding_points_at_sentinel():
             np.testing.assert_array_equal(lv[i, k:], 0.0)
             # live entries point strictly inside the owned block
             assert np.all(lc[i, :k] < ell.in_pad)
+
+
+def test_overlap_decision_modes():
+    """auto flips exactly when the hidden time beats the split overhead;
+    forced modes are honored (except on, without ghosts to hide)."""
+    from repro.core.costmodel import overlap_split_overhead
+
+    rows = 2 ** 21
+    overhead = overlap_split_overhead(rows)
+    # paper-scale regime: tx and tl both dwarf the overhead -> on
+    on = overlap_decision(100e-6, 300e-6, rows=rows)
+    assert on.mode == "on" and not on.forced
+    assert on.exposed_s == 0.0 and on.hidden_frac == 1.0
+    assert on.overhead_s == overhead
+    # smoke regime: local compute below the overhead -> off, fully exposed
+    off = overlap_decision(100e-6, overhead / 10, rows=rows)
+    assert off.mode == "off" and off.exposed_s == 100e-6
+    assert off.hidden_frac == 0.0
+    # partial hiding: tl < tx but still worth it
+    part = overlap_decision(100e-6, 60e-6, rows=1000)
+    assert part.mode == "on"
+    np.testing.assert_allclose(part.exposed_s, 40e-6)
+    np.testing.assert_allclose(part.hidden_frac, 0.6)
+    # forced modes
+    fon = overlap_decision(1e-9, 1e-12, rows=rows, mode="on")
+    assert fon.mode == "on" and fon.forced
+    foff = overlap_decision(1.0, 1.0, rows=rows, mode="off")
+    assert foff.mode == "off" and foff.forced
+    # no ghosts: nothing to hide, even when forced on
+    none = overlap_decision(0.0, 1.0, rows=rows, mode="on", has_ghost=False)
+    assert none.mode == "off" and none.exposed_s == 0.0
+    with pytest.raises(ValueError):
+        overlap_decision(1.0, 1.0, rows=rows, mode="banana")
+
+
+def test_select_spmv_overlap_on_partition():
+    """The operator-level selector: off at smoke scale (local compute is
+    sub-overhead), on when the exchange estimate justifies the split; the
+    selection string is describe()-ready."""
+    A = diffusion_2d(24, 24)
+    part = partition_csr(A, 4)
+    off = select_spmv_overlap(part, 1e-3)
+    assert off.mode == "off" and not off.forced
+    assert off.exchange_s == 1e-3 and off.exposed_s == 1e-3
+    forced = select_spmv_overlap(part, 1e-3, mode="on")
+    assert forced.mode == "on" and forced.forced
+    assert "overlap=on (forced)" in str(forced)
+    assert "tx=1000.0us" in str(forced)
+    # single process: no ghosts, auto and forced both stay off
+    solo = select_spmv_overlap(partition_csr(A, 1), 1e-3, mode="on")
+    assert solo.mode == "off"
+
+
+def test_row_block_bucket_map_structure():
+    """Lists cover exactly the live buckets of each row block, padding
+    holds bucket_lo, and the banded operator actually skips buckets."""
+    A = diffusion_2d(24, 24)
+    part = partition_csr(A, 4)
+    bell = partitioned_to_ell_blocked(part, block_cols=32)
+    C = bell.n_buckets
+    lists, counts = row_block_bucket_map(bell, block_rows=16)
+    P, nrb, M = lists.shape
+    assert P == 4 and nrb == bell.row_pad // 16
+    assert counts.shape == (P, nrb)
+    assert M == counts.max() and M < C  # banded: skipping engages
+    live = (bell.vals.reshape(P, bell.row_pad, C, bell.K) != 0).any(-1)
+    for p in range(P):
+        for rb in range(nrb):
+            want = np.flatnonzero(live[p, rb * 16: (rb + 1) * 16].any(0))
+            c = int(counts[p, rb])
+            np.testing.assert_array_equal(lists[p, rb, :c], want)
+            np.testing.assert_array_equal(lists[p, rb, c:], 0)  # bucket_lo
+    # restricted windows partition the full lists
+    Cl = bell.n_local_buckets
+    llists, lcounts = row_block_bucket_map(bell, block_rows=16, bucket_hi=Cl)
+    glists, gcounts = row_block_bucket_map(bell, block_rows=16, bucket_lo=Cl)
+    assert np.all(lcounts + gcounts == counts)
+    assert np.all(llists < Cl)
+    assert np.all(glists >= Cl)  # padding holds bucket_lo == Cl
+    with pytest.raises(AssertionError):
+        row_block_bucket_map(bell, bucket_lo=C)
