@@ -1,0 +1,99 @@
+"""Elastic re-plan cost: cold setup vs shrink vs warm grow-back.
+
+One AMG hierarchy is driven through the failure-recovery sequence the
+runtime layer implements (see ``repro.runtime.controller``):
+
+    cold setup on N devices -> shrink to N/2 ("heartbeat") ->
+    grow back to N ("requested") -> straggler rebalance ("rebalance")
+
+through a single private ``PlanCache``.  Two row families come out:
+
+* ``elastic/replan_seconds/*`` — MEASURED host-side wall time of each
+  rebuild (plan construction + executor binding; kind=measured-host).
+  The headline is the ratio grow_warm/cold: growing back to a seen
+  geometry is pure cache traffic.
+* ``elastic/plan_misses/*`` — the plan-cache miss/hit delta of each
+  rebuild, which is exact plan-geometry arithmetic for a fixed
+  (rows, device count): kind=exact-plan, gated by benchmarks.compare.
+  ``grow_warm`` must report 0 misses — the warm-resize contract the
+  8-device integration test asserts, kept under the perf gate here.
+"""
+from __future__ import annotations
+
+
+def elastic_rows(rows: int):
+    import time
+
+    import jax
+
+    # match the measured sections: 8-byte values end to end
+    jax.config.update("jax_enable_x64", True)
+
+    import numpy as np
+
+    from repro.amg import DistributedHierarchy, build_hierarchy, diffusion_2d
+    from repro.core.cache import PlanCache
+
+    n_dev = jax.device_count()
+    small = max(1, n_dev // 2)
+    nx = int(np.sqrt(min(rows, 65_536)))
+    A = diffusion_2d(nx, nx)
+    h = build_hierarchy(A)
+    cache = PlanCache()   # private: counters start at zero for exact rows
+
+    def mesh_n(n):
+        return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("proc",))
+
+    def miss_row(tag, ev, extra=""):
+        return (
+            f"elastic/plan_misses/{tag}", float(ev.plan_misses),
+            f"kind=exact-plan|hits={ev.plan_hits}"
+            f"|exec_misses={ev.exec_misses}|exec_hits={ev.exec_hits}"
+            f"|procs={ev.old_n}->{ev.new_n}{extra}|",
+        )
+
+    def time_row(tag, secs, n):
+        return (
+            f"elastic/replan_seconds/{tag}", secs * 1e6,
+            f"kind=measured-host|n_procs={n}|levels={len(h.levels)}|",
+        )
+
+    out = []
+
+    # ---- cold: first setup ever on the full device set -------------------
+    from repro.runtime.controller import cache_delta_event
+
+    before = cache.counters()
+    t0 = time.perf_counter()
+    dh = DistributedHierarchy.setup(h, mesh_n(n_dev), "proc", cache=cache)
+    cold_secs = time.perf_counter() - t0
+    ev_cold = cache_delta_event(cache, before, "cold", n_dev, n_dev,
+                                cold_secs)
+    out.append(time_row("cold", cold_secs, n_dev))
+    out.append(miss_row("cold", ev_cold))
+
+    # ---- shrink: half the devices "time out" -----------------------------
+    dh_small = dh.repartition(mesh_n(small), reason="heartbeat")
+    ev = dh_small.last_resize
+    out.append(time_row("shrink", ev.replan_seconds, small))
+    out.append(miss_row("shrink", ev))
+
+    # ---- grow back: every pattern must come out of the cache -------------
+    dh_back = dh_small.repartition(mesh_n(n_dev), reason="requested")
+    ev = dh_back.last_resize
+    out.append(time_row("grow_warm", ev.replan_seconds, n_dev))
+    out.append(miss_row("grow_warm", ev,
+                        extra=f"|warm={'yes' if ev.warm else 'no'}"))
+
+    # ---- straggler rebalance: skewed row blocks are a NEW geometry -------
+    # fixed synthetic EWMA weights (host 1 measured 3x slow) so the
+    # resulting offsets — hence the miss count — are deterministic
+    weights = np.full(n_dev, 0.010)
+    if n_dev > 1:
+        weights[1] *= 3.0
+    dh_reb = dh_back.repartition(row_weights=weights, reason="rebalance")
+    ev = dh_reb.last_resize
+    out.append(time_row("rebalance", ev.replan_seconds, n_dev))
+    out.append(miss_row("rebalance", ev))
+
+    return out

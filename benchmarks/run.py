@@ -128,6 +128,16 @@ def spmv_overlap_rows(rows: int, n_procs: int, tracer=None):
     return overlap_rows(rows, n_procs) + measured_overlap_rows(rows, tracer)
 
 
+def elastic_replan_rows(rows: int):
+    """Elastic re-plan cost (cold setup vs shrink vs warm grow-back vs
+    straggler rebalance) through one plan cache: measured-host wall times
+    plus exact-plan cache miss/hit deltas — grow_warm is gated at 0
+    misses (the warm-resize contract)."""
+    from .elastic_bench import elastic_rows
+
+    return elastic_rows(rows)
+
+
 def moe_comm_rows(smoke: bool, tracer=None):
     """MoE dispatch exchange: modeled per-mode comparison on a paper-scale
     EP group plus MEASURED jitted dispatch (all transports + auto) on the
@@ -304,6 +314,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
              lambda: measured_setup_exchange_rows(rows, tracer)),
             ("moe_comm", lambda: moe_comm_rows(smoke=True,
                                                tracer=tracer)),
+            ("elastic", lambda: elastic_replan_rows(rows)),
             ("roofline", roofline_report.rows),
         ]
     return [
@@ -323,6 +334,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
         ("measured_setup_exchange",
          lambda: measured_setup_exchange_rows(rows, tracer)),
         ("moe_comm", lambda: moe_comm_rows(smoke=False, tracer=tracer)),
+        ("elastic", lambda: elastic_replan_rows(rows)),
         ("roofline", roofline_report.rows),
     ]
 

@@ -1,0 +1,118 @@
+"""Elastic, straggler-tolerant distributed solving — the runtime layer
+wired into the planning stack, narrated end to end.
+
+Three acts on one Poisson problem:
+
+1. **Shrink mid-solve**: run k V-cycle iterations on the full device set,
+   drop half the devices (as a heartbeat timeout would), repartition the
+   whole hierarchy through ``DistributedHierarchy.repartition`` and warm-
+   start the remaining iterations from the mid-solve iterate.  The printed
+   ``ResizeEvent`` shows the re-plan wall time and the plan-cache delta.
+2. **Grow back**: repartition to the original device count through the
+   SAME plan cache — every pattern for the seen geometry survives, so the
+   event reports ``plan misses=0`` (a warm resize: re-planning cost is the
+   paper's init amortization argument applied to failure recovery).
+3. **Straggler**: inject a 3x-slow host into the per-host step-seconds an
+   ``ElasticController`` observes; after ``patience`` consecutive flags it
+   rebalances the row blocks inversely to the measured EWMA times and
+   re-fits ``MachineParams`` from the recorded exchange trace, so the
+   rebuilt hierarchy's Section-5 transport selection runs under the
+   degraded (measured) rates.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_solve.py
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=28 * 28)
+    ap.add_argument("--iters", type=int, default=8,
+                    help="total V-cycle iterations (half before the shrink)")
+    ap.add_argument("--slow-host", type=int, default=2)
+    ap.add_argument("--slow-factor", type=float, default=3.0)
+    args = ap.parse_args()
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.amg import DistributedHierarchy, build_hierarchy, diffusion_2d
+    from repro.core import default_plan_cache
+    from repro.profile import TraceRecorder
+    from repro.runtime import ElasticController, StragglerConfig
+
+    n_dev = jax.device_count()
+    assert n_dev >= 2, "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
+    nx = int(np.sqrt(args.rows))
+    A = diffusion_2d(nx, nx)
+    h = build_hierarchy(A)
+    cache = default_plan_cache()
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=A.nrows)
+
+    def mesh_n(n):
+        return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("proc",))
+
+    # ---- act 1: shrink mid-solve -----------------------------------------
+    print(f"[elastic] solving on {n_dev} devices "
+          f"({nx}x{nx} diffusion, {len(h.levels)} AMG levels)")
+    dh = DistributedHierarchy.setup(h, mesh_n(n_dev), "proc", cache=cache)
+    k = args.iters // 2
+    x_mid, hist = dh.solve(b, tol=0.0, max_iters=k)
+    print(f"[elastic] {k} iters done, rel_res={hist[-1]:.3e}; "
+          f"2 devices time out -> shrink to {n_dev // 2}")
+    dh_small = dh.repartition(mesh_n(n_dev // 2), reason="heartbeat")
+    print(f"[elastic]   {dh_small.last_resize}")
+    x, hist2 = dh_small.solve(b, tol=0.0, max_iters=args.iters - k, x0=x_mid)
+    rel = np.linalg.norm(b - A.matvec(x)) / np.linalg.norm(b)
+    print(f"[elastic] warm-started remaining {args.iters - k} iters on "
+          f"{n_dev // 2} devices, rel_res={rel:.3e}")
+
+    # ---- act 2: grow back (warm: zero re-plans) --------------------------
+    dh_back = dh_small.repartition(mesh_n(n_dev), reason="requested")
+    ev = dh_back.last_resize
+    print(f"[elastic] devices return -> grow back: {ev}")
+    print(f"[elastic]   warm resize: {ev.warm} "
+          f"(every pattern came out of the plan cache)")
+
+    # ---- act 3: straggler rebalance + refit ------------------------------
+    tracer = TraceRecorder()
+    dh_back.measure_exchange_seconds(iters=2, warmup=1, tracer=tracer)
+    ctrl = ElasticController(n_dev, cache=cache, tracer=tracer,
+                             straggler_cfg=StragglerConfig(patience=3),
+                             cooldown=8)
+    print(f"[straggler] injecting {args.slow_factor:.1f}x slowdown on "
+          f"host {args.slow_host}; feeding per-host step seconds...")
+    base = np.full(n_dev, 0.010)
+    mitigated = False
+    for t in range(24):
+        times = base.copy()
+        if not mitigated:
+            times[args.slow_host] *= args.slow_factor
+        flagged = ctrl.observe_step_times(times)
+        if flagged:
+            dh_back, event = ctrl.mitigate_hierarchy(dh_back, flagged)
+            mitigated = True
+            print(f"[straggler] {event}")
+            print(f"[straggler]   {event.resize}")
+            rows = np.diff(dh_back.levels[0].A.part.offsets)
+            print(f"[straggler] fine-level rows/host: {rows.tolist()} "
+                  f"(host {args.slow_host} sheds load)")
+    x2, hist3 = dh_back.solve(b, tol=1e-8, max_iters=40)
+    rel2 = np.linalg.norm(b - A.matvec(x2)) / np.linalg.norm(b)
+    print(f"[straggler] rebalanced solve: {len(hist3)} iters, "
+          f"rel_res={rel2:.3e}, params={dh_back.params.name}")
+    print(f"[elastic] controller summary: {ctrl.summary()}")
+    print(f"[elastic] plan cache: hits={cache.hits} misses={cache.misses} "
+          f"exec_hits={cache.exec_hits} exec_misses={cache.exec_misses}")
+
+
+if __name__ == "__main__":
+    main()

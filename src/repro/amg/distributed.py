@@ -20,8 +20,17 @@ executor with the padded-ELL SpMV kernel (``sparse.device``).  With the
 same rho estimates the device residual history tracks the host
 :func:`~repro.amg.hierarchy.solve` to rounding error.
 
-Entry points: ``DistributedHierarchy.setup(...)``, ``.solve(b)``,
-``.selection_table()``, ``.measure_exchange_seconds()``.
+Elasticity: :meth:`DistributedHierarchy.repartition` rebuilds the whole
+hierarchy onto a different mesh / process count / row balance *through the
+same PlanCache*, so only patterns the new geometry has never seen are
+re-planned — a grow-back to a previously used geometry re-plans nothing
+(observable via the attached ``last_resize`` event).  ``row_weights``
+(per-host EWMA step seconds from ``runtime.straggler``) skews every
+level's row blocks inversely to measured speed — the straggler mitigation.
+
+Entry points: ``DistributedHierarchy.setup(...)``, ``.solve(b, x0=...)``,
+``.repartition(...)``, ``.selection_table()``,
+``.measure_exchange_seconds()``.
 """
 from __future__ import annotations
 
@@ -150,6 +159,12 @@ class DistributedHierarchy:
         # populated by setup_partitioned: the distributed-setup record
         # (per-level blocks + exchange accounting), None for host lowering
         self.setup_info: Optional[DistributedSetup] = None
+        # elastic bookkeeping: the host hierarchy this was lowered from
+        # (repartition source of truth; reconstructed on demand for
+        # setup_partitioned-built hierarchies) and the ResizeEvent of the
+        # rebuild that produced this instance (None for a first setup)
+        self._host: Optional[Hierarchy] = None
+        self.last_resize = None
         self._build_device_fns()
 
     # ------------------------------------------------------------- setup
@@ -169,6 +184,7 @@ class DistributedHierarchy:
         spmv_vmem_limit: Optional[int] = None,
         spmv_block_cols: int = DEFAULT_BLOCK_COLS,
         spmv_overlap: str = "auto",
+        row_weights: Optional[np.ndarray] = None,
     ) -> "DistributedHierarchy":
         """Partition every level and init its collectives once (persistent).
 
@@ -182,6 +198,12 @@ class DistributedHierarchy:
         exchange/compute-overlap schedule per operator whenever the modeled
         hidden exchange time beats the split overhead; ``"on"``/``"off"``
         pin it.  All choices are recorded on each :class:`DistOp`.
+
+        ``row_weights`` (per-host step *seconds*, e.g. the EWMA from
+        ``runtime.straggler.StragglerDetector``) skews every level's row
+        blocks inversely to the weights via
+        ``runtime.straggler.rebalance_shards`` — a 2x-slower host owns half
+        the rows.  ``None`` keeps the balanced contiguous blocking.
         """
         n_procs = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name])
         topo = Topology(
@@ -206,7 +228,19 @@ class DistributedHierarchy:
             )
             return DistOp(part, coll, ell, sel, osel)
 
-        offs = [block_offsets(lvl.A.nrows, n_procs) for lvl in h.levels]
+        if row_weights is None:
+            offs = [block_offsets(lvl.A.nrows, n_procs) for lvl in h.levels]
+        else:
+            from ..runtime.straggler import rebalance_shards
+
+            w = np.asarray(row_weights, dtype=float).reshape(-1)
+            assert len(w) == n_procs, (len(w), n_procs)
+            offs = [
+                np.concatenate(
+                    [[0], np.cumsum(rebalance_shards(w, lvl.A.nrows))]
+                ).astype(np.int64)
+                for lvl in h.levels
+            ]
         levels: List[DistributedLevel] = []
         for k, lvl in enumerate(h.levels):
             A_op = make_op(lvl.A, offs[k], offs[k])
@@ -224,11 +258,13 @@ class DistributedHierarchy:
                 dl.R = make_op(lvl.R, offs[k + 1], offs[k])
                 dl.P = make_op(lvl.P, offs[k], offs[k + 1])
             levels.append(dl)
-        return cls(levels, mesh, axis_name, topo, cache, dtype,
-                   strategy, params, value_bytes,
-                   spmv_variant=spmv_variant,
-                   spmv_vmem_limit=spmv_vmem_limit,
-                   spmv_overlap=spmv_overlap)
+        dh = cls(levels, mesh, axis_name, topo, cache, dtype,
+                 strategy, params, value_bytes,
+                 spmv_variant=spmv_variant,
+                 spmv_vmem_limit=spmv_vmem_limit,
+                 spmv_overlap=spmv_overlap)
+        dh._host = h
+        return dh
 
     @classmethod
     def setup_partitioned(
@@ -396,11 +432,16 @@ class DistributedHierarchy:
         b: np.ndarray,
         tol: float = 1e-8,
         max_iters: int = 100,
+        x0: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, List[float]]:
         """AMG-preconditioned stationary iteration, fully on device.
 
         Mirrors the host :func:`repro.amg.hierarchy.solve` loop (residual
-        check before update) so histories are comparable.
+        check before update) so histories are comparable.  ``x0`` (a global
+        host vector) warm-starts the iteration — how a solve resumes on a
+        repartitioned hierarchy after an elastic resize: the iterate from
+        the old geometry is re-packed under the new blocking and the
+        contraction continues where it left off.
         """
         import jax.numpy as jnp
 
@@ -408,7 +449,13 @@ class DistributedHierarchy:
         bg = jnp.asarray(
             pack_vector(lv0.A.part.col_offsets, lv0.pad, b.astype(self.dtype))
         )
-        x = jnp.zeros_like(bg)
+        if x0 is None:
+            x = jnp.zeros_like(bg)
+        else:
+            x = jnp.asarray(
+                pack_vector(lv0.A.part.col_offsets, lv0.pad,
+                            np.asarray(x0).astype(self.dtype))
+            )
         nb = max(float(np.linalg.norm(b)), 1e-300)
         hist: List[float] = []
         for _ in range(max_iters):
@@ -419,6 +466,80 @@ class DistributedHierarchy:
                 break
             x = x_new
         return unpack_vector(lv0.A.part.offsets, np.asarray(x)), hist
+
+    # ------------------------------------------------------------ elastic
+    def _global_hierarchy(self) -> Hierarchy:
+        """The host hierarchy this solve represents — stored by
+        :meth:`setup`, reconstructed (values bit-exact, via
+        ``sparse.partition.partitioned_to_global``) for hierarchies built
+        distributed by :meth:`setup_partitioned`.  ``rho`` estimates carry
+        over unchanged so the repartitioned Chebyshev arithmetic is
+        identical."""
+        if self._host is not None:
+            return self._host
+        from ..sparse.partition import partitioned_to_global
+        from .hierarchy import Level
+
+        levels: List[Level] = []
+        for lv in self.levels:
+            levels.append(Level(
+                A=partitioned_to_global(lv.A.part),
+                P=partitioned_to_global(lv.P.part) if lv.P else None,
+                R=partitioned_to_global(lv.R.part) if lv.R else None,
+                rho=lv.rho,
+            ))
+        self._host = Hierarchy(levels)
+        return self._host
+
+    def repartition(
+        self,
+        mesh=None,
+        axis_name: Optional[str] = None,
+        procs_per_region: Optional[int] = None,
+        row_weights: Optional[np.ndarray] = None,
+        params: Optional[MachineParams] = None,
+        reason: str = "requested",
+    ) -> "DistributedHierarchy":
+        """Rebuild the hierarchy onto a new geometry through the SAME cache.
+
+        The elastic entry point: pass a smaller/larger ``mesh`` after a
+        device-set change, ``row_weights`` (per-host step seconds) after a
+        straggler flag, and/or re-fitted ``params`` so the Section-5
+        selector re-runs under measured rates.  Every pattern is re-planned
+        through ``self.cache`` — patterns the target geometry has produced
+        before (e.g. growing back to a previously used device count) hit
+        the surviving entries and re-plan nothing.  The returned hierarchy
+        carries a ``runtime.controller.ResizeEvent`` in ``last_resize``
+        with the rebuild's wall time and the plan-cache miss/hit delta.
+        """
+        import time as _time
+
+        from ..runtime.controller import cache_delta_event
+
+        mesh = mesh if mesh is not None else self.mesh
+        axis_name = axis_name if axis_name is not None else self.axis_name
+        h = self._global_hierarchy()
+        before = self.cache.counters()
+        t0 = _time.perf_counter()
+        new = DistributedHierarchy.setup(
+            h, mesh, axis_name,
+            procs_per_region=procs_per_region,
+            strategy=self.strategy,
+            params=params if params is not None else self.params,
+            value_bytes=self.value_bytes,
+            cache=self.cache,
+            dtype=self.dtype,
+            spmv_variant=self.spmv_variant,
+            spmv_vmem_limit=self.spmv_vmem_limit,
+            spmv_overlap=self.spmv_overlap,
+            row_weights=row_weights,
+        )
+        secs = _time.perf_counter() - t0
+        new.last_resize = cache_delta_event(
+            self.cache, before, reason,
+            self.topo.n_procs, new.topo.n_procs, secs,
+        )
+        return new
 
     # ------------------------------------------------------- introspection
     def selection_table(self) -> List[Tuple[int, str, str, Optional[str]]]:

@@ -211,6 +211,19 @@ class PlanCache:
         self._insert(self._moe_execs, key, fn, "moe_executor")
         return fn
 
+    def counters(self) -> Dict[str, int]:
+        """Snapshot of the flat hit/miss counters.  Take one before a
+        rebuild and diff afterwards to attribute plan/executor work to that
+        rebuild — ``runtime.controller.cache_delta_event`` turns the pair
+        into a ``ResizeEvent`` (how the elastic path proves a grow-back to
+        a seen geometry re-planned nothing)."""
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "exec_hits": self.exec_hits,
+            "exec_misses": self.exec_misses,
+        }
+
     def stats(self) -> Dict[str, Any]:
         """Flat legacy counters plus per-namespace hit/miss/entry counts
         (the surface ``repro.profile`` and the benchmarks report)."""

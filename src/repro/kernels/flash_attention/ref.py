@@ -48,10 +48,12 @@ def attention_ref_naive(
     scale = (d ** -0.5) if scale is None else scale
     kv_len = Tk if kv_len is None else kv_len
     group = Hq // Hkv
+    # f32 floor, but wider inputs (f64 bit-match checks) keep their width
+    cdt = jnp.promote_types(q.dtype, jnp.float32)
     kk = jnp.repeat(k, group, axis=1)
     vv = jnp.repeat(v, group, axis=1)
-    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                   kk.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(cdt),
+                   kk.astype(cdt)) * scale
     q_pos = q_offset + jnp.arange(Tq)[:, None]
     k_pos = jnp.arange(Tk)[None, :]
     mask = _mask(q_pos, k_pos, causal, window, kv_len)
@@ -60,8 +62,7 @@ def attention_ref_naive(
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
     p = p / jnp.where(l == 0, 1.0, l)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(jnp.float32),
-                     vv.astype(jnp.float32))
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(cdt), vv.astype(cdt))
     return out.astype(q.dtype)
 
 
@@ -98,14 +99,15 @@ def attention_ref(
     )  # [nc, B, Hkv, chunk, d]
     vc = jnp.moveaxis(v.reshape(B, Hkv, nc, chunk, d), 2, 0)
 
-    qf = q.astype(jnp.float32)
+    cdt = jnp.promote_types(q.dtype, jnp.float32)
+    qf = q.astype(cdt)
     q_pos = q_offset + jnp.arange(Tq)[:, None]
 
     def body(carry, inp):
         m_prev, l_prev, acc = carry
         kb, vb, ci = inp
-        kb = jnp.repeat(kb, group, axis=1).astype(jnp.float32)
-        vb = jnp.repeat(vb, group, axis=1).astype(jnp.float32)
+        kb = jnp.repeat(kb, group, axis=1).astype(cdt)
+        vb = jnp.repeat(vb, group, axis=1).astype(cdt)
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale
         k_pos = ci * chunk + jnp.arange(chunk)[None, :]
         mask = _mask(q_pos, k_pos, causal, window, kv_len)
@@ -118,9 +120,9 @@ def attention_ref(
         acc = corr * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
         return (m_new, l_new, acc), None
 
-    m0 = jnp.full((B, Hq, Tq, 1), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((B, Hq, Tq, 1), jnp.float32)
-    a0 = jnp.zeros((B, Hq, Tq, d), jnp.float32)
+    m0 = jnp.full((B, Hq, Tq, 1), NEG_INF, cdt)
+    l0 = jnp.zeros((B, Hq, Tq, 1), cdt)
+    a0 = jnp.zeros((B, Hq, Tq, d), cdt)
     # checkpoint the chunk body: backward recomputes the [Tq, chunk] scores
     # per chunk instead of saving them all (flash-attention's bwd strategy);
     # residuals shrink from O(Tq*Tk) to O(Tq*d) per chunk.

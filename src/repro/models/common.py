@@ -192,10 +192,19 @@ def count_params_analytic(c: ArchConfig) -> int:
 # ---------------------------------------------------------------------------
 
 
+def compute_dtype(dtype) -> jnp.dtype:
+    """Numerics floor: bf16 inputs compute in f32, but a wider input
+    (f64, e.g. the elastic bit-match checks) keeps its own precision —
+    downcasting f64 intermediates to f32 would quantize away the 1e-12
+    reproducibility the serving resume contract is verified against."""
+    return jnp.promote_types(dtype, jnp.float32)
+
+
 def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
-    xf = x.astype(jnp.float32)
+    cdt = compute_dtype(x.dtype)
+    xf = x.astype(cdt)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(cdt))
             ).astype(x.dtype)
 
 
@@ -209,8 +218,9 @@ def activation(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
     raise ValueError(name)
 
 
-def rope_freqs(dh_rot: int, theta: float) -> jnp.ndarray:
-    return 1.0 / (theta ** (jnp.arange(0, dh_rot, 2, dtype=jnp.float32) / dh_rot))
+def rope_freqs(dh_rot: int, theta: float,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh_rot, 2, dtype=dtype) / dh_rot))
 
 
 def apply_rope(
@@ -222,10 +232,11 @@ def apply_rope(
     dh = x.shape[-1]
     dh_rot = int(dh * partial)
     dh_rot -= dh_rot % 2
-    freqs = rope_freqs(dh_rot, theta)                       # [dh_rot/2]
-    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,dr/2]
+    cdt = compute_dtype(x.dtype)
+    freqs = rope_freqs(dh_rot, theta, dtype=cdt)            # [dh_rot/2]
+    ang = positions[:, None, :, None].astype(cdt) * freqs   # [B,1,T,dr/2]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    xr = x[..., :dh_rot].astype(jnp.float32)
+    xr = x[..., :dh_rot].astype(cdt)
     x1, x2 = xr[..., ::2], xr[..., 1::2]
     rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     rot = rot.reshape(xr.shape)
@@ -242,14 +253,15 @@ def apply_mrope(
 ) -> jnp.ndarray:
     """Qwen2-VL multimodal RoPE: frequency pairs split into (t,h,w) sections."""
     dh = x.shape[-1]
-    freqs = rope_freqs(dh, theta)                           # [dh/2]
+    cdt = compute_dtype(x.dtype)
+    freqs = rope_freqs(dh, theta, dtype=cdt)                # [dh/2]
     sec = jnp.concatenate([
         jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
     ])                                                      # [dh/2]
-    pos = jnp.take(positions3.astype(jnp.float32), sec, axis=1)  # [B, dh/2, T]
+    pos = jnp.take(positions3.astype(cdt), sec, axis=1)     # [B, dh/2, T]
     ang = pos.transpose(0, 2, 1)[:, None] * freqs[None, None, None, :]
     cos, sin = jnp.cos(ang), jnp.sin(ang)                   # [B,1,T,dh/2]
-    xf = x.astype(jnp.float32)
+    xf = x.astype(cdt)
     x1, x2 = xf[..., ::2], xf[..., 1::2]
     rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return rot.reshape(x.shape).astype(x.dtype)

@@ -504,6 +504,30 @@ def init_moe(init: Initializer, cfg: ArchConfig, L: int, e_phys: int) -> Dict:
     return p
 
 
+def remap_expert_params(moe_params: Dict, e_log: int,
+                        r_old: int, r_new: int) -> Dict:
+    """Re-replicate expert weights for a changed EP group size.
+
+    The physical expert layout is ``phys = logical * replicas + rep``
+    (see ``_pack_routing``), so replica 0 of every logical expert lives at
+    stride ``replicas`` — slicing ``[:, ::r_old]`` recovers the logical
+    weights and ``np.repeat(..., r_new, axis=1)`` re-expands them for the
+    new group.  Operates host-side on the expert tensors (``w_gate`` /
+    ``w_up`` / ``w_down``, shape [L, e_log*r, ...]); router and shared
+    weights are replication-independent and pass through untouched.
+    Dtypes are preserved (``np.repeat`` never casts).
+    """
+    import jax
+
+    out = dict(moe_params)
+    for key in ("w_gate", "w_up", "w_down"):
+        v = np.asarray(jax.device_get(moe_params[key]))
+        assert v.shape[1] == e_log * r_old, (v.shape, e_log, r_old)
+        base = v[:, ::r_old]                   # replica 0 per logical expert
+        out[key] = np.repeat(base, r_new, axis=1)
+    return out
+
+
 def moe_param_specs(cfg: ArchConfig, plan: MoEPlan) -> Dict:
     """PartitionSpecs for init_moe params (leading L axis unsharded)."""
     e_spec = plan.ep_axes if len(plan.ep_axes) > 1 else plan.ep_axes[0]
@@ -552,7 +576,9 @@ def route(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Top-k routing -> (phys expert ids [N,k], weights [N,k], aux loss)."""
     N = x.shape[0]
-    logits = x.astype(jnp.float32) @ router_w              # [N, E_log]
+    # f32 floor, but f64 activations keep their width (bit-match checks)
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    logits = x.astype(cdt) @ router_w.astype(cdt)          # [N, E_log]
     probs = jax.nn.softmax(logits, axis=-1)
     w, eid = jax.lax.top_k(probs, plan.top_k)              # [N, k]
     w = w / jnp.sum(w, axis=-1, keepdims=True)
@@ -699,9 +725,10 @@ def moe_dispatch_lane(
         xb = jnp.broadcast_to(x_lane[None], (e_per, N, D))
         y_all = _expert_ffn(wg, wu, wd, act_fn, xb)      # [e_per, N, D]
         e_ids = ep_idx * e_per + jnp.arange(e_per)
+        cdt = jnp.promote_types(x_lane.dtype, jnp.float32)
         match = phys[None, :, :] == e_ids[:, None, None]  # [e_per, N, k]
-        wk = jnp.sum(match * w[None].astype(jnp.float32), axis=-1)
-        y = jnp.einsum("en,end->nd", wk, y_all.astype(jnp.float32))
+        wk = jnp.sum(match * w[None].astype(cdt), axis=-1)
+        y = jnp.einsum("en,end->nd", wk, y_all.astype(cdt))
         y = jax.lax.psum(y, "model")
         return (y.astype(x_lane.dtype), aux, jnp.zeros((), jnp.float32),
                 counts)

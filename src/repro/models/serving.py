@@ -71,10 +71,12 @@ def _decode_attn(p_l, x, cur, cfg, window, cache):
 
     def append(args):
         ck, cv = args
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, 0, cur, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, 0, cur, 0))
+        # literal 0s promote to int64 under jax_enable_x64 while `cur`
+        # stays the caller's int32 — dynamic_update_slice requires one type
+        zero = jnp.zeros((), cur.dtype)
+        idx = (zero, zero, cur, zero)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), idx)
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), idx)
         return ck, cv
 
     def roll(args):
@@ -144,8 +146,15 @@ def _moe_ffn(model: Model, p_l, h, n_tokens, moe_plan=None, collect=False):
 # ---------------------------------------------------------------------------
 
 
-def prefill(model: Model, params: Dict, inputs: Dict, max_len: int):
-    """Fill caches from a prompt. Returns (last_logits [B,V], cache)."""
+def prefill(model: Model, params: Dict, inputs: Dict, max_len: int,
+            moe_plan=None):
+    """Fill caches from a prompt. Returns (last_logits [B,V], cache).
+
+    ``moe_plan`` pins the MoE dispatch plan instead of the per-(B*T)
+    cached one — ``serve.engine`` plans prefill dispatch once for the
+    worst case (B * max_len tokens) so re-prefills at every history
+    length share a single plan-cache entry (capacity oversizes, results
+    are unchanged: excess slots carry zero combine weight)."""
     cfg = model.cfg
     if cfg.family == "audio":
         return _prefill_encdec(model, params, inputs, max_len)
@@ -201,7 +210,7 @@ def prefill(model: Model, params: Dict, inputs: Dict, max_len: int):
                                      max_len)
             x = x + a
             h = rms_norm(x, p_l["ln2"])
-            x = x + _moe_ffn(model, p_l, h, B * T)
+            x = x + _moe_ffn(model, p_l, h, B * T, moe_plan=moe_plan)
             caches.append(c)
     elif cfg.family == "ssm":
         for i in range(cfg.n_layers):

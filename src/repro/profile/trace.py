@@ -197,6 +197,39 @@ class TraceRecorder:
                                   label=rep.label))
         return out
 
+    def per_proc_step_seconds(
+        self, n_procs: int, pure_only: bool = True
+    ) -> np.ndarray:
+        """Per-host step *seconds* attributed from the recorded exchanges —
+        the measured feed for ``runtime.straggler.StragglerDetector``.
+
+        Each sample's wall seconds are split across processes by their
+        share of the sample's total traffic (values moved, intra + inter,
+        summed over plan steps): a host that moved 2x the values of the
+        fleet is charged 2x the time.  Samples recorded on a different
+        process count are skipped.  Returns ``[n_procs]`` seconds (zeros
+        when no matching samples exist) — a *relative* load signal, not a
+        literal wall clock: exchanges are synchronous, so true per-host
+        time is unobservable from one-sided timings; traffic share is the
+        deterministic proxy the detector thresholds against the median.
+        """
+        out = np.zeros(int(n_procs), dtype=float)
+        for s in self.samples:
+            if pure_only and not s.pure_exchange:
+                continue
+            if s.n_procs != n_procs:
+                continue
+            per = np.zeros(n_procs, dtype=float)
+            for st in s.steps:
+                per += np.asarray(st.intra_vals, dtype=float)
+                per += np.asarray(st.inter_vals, dtype=float)
+            tot = per.sum()
+            if tot <= 0:
+                out += s.seconds / n_procs
+            else:
+                out += s.seconds * (per / tot)
+        return out
+
     def summary(self) -> Dict[str, int]:
         return {
             "samples": len(self.samples),

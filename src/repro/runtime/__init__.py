@@ -1,3 +1,9 @@
+from .controller import (
+    ElasticController,
+    RebalanceEvent,
+    ResizeEvent,
+    cache_delta_event,
+)
 from .checkpoint import (
     CheckpointManager,
     latest_step,
@@ -19,4 +25,6 @@ __all__ = [
     "HeartbeatMonitor", "MeshRequirements", "choose_mesh_shape",
     "make_mesh_from_devices", "reshard_state",
     "StragglerConfig", "StragglerDetector", "rebalance_shards",
+    "ElasticController", "RebalanceEvent", "ResizeEvent",
+    "cache_delta_event",
 ]

@@ -1,5 +1,25 @@
 """Checkpoint/restart: atomic, checksummed, double-buffered, async.
 
+Units and contracts (the operator-facing surface, see docs/OPERATIONS.md):
+
+* :func:`save_checkpoint` serializes a pytree under ``step_<N>`` (steps
+  are dimensionless training/solver iterations) and only then atomically
+  repoints ``LATEST`` — a crashed writer leaves at most a ``*.tmp-*``
+  directory, never a corrupt ``LATEST`` target.
+* :func:`restore_checkpoint` restores into the *structure* of a template
+  pytree: leaf count, per-leaf shape, and recorded dtype must match, and
+  every leaf's sha256 is verified (``IOError`` on mismatch) unless
+  ``validate=False``.
+* :meth:`CheckpointManager.save` snapshots device arrays to host BEFORE
+  returning, so with ``async_save=True`` training may mutate buffers
+  immediately; a failed background save surfaces as an exception on the
+  next :meth:`CheckpointManager.wait` / ``save`` / ``restore_latest``.
+* :meth:`CheckpointManager.restore_latest` waits for any in-flight save
+  first, then restores the newest *complete* checkpoint: partial
+  ``*.tmp-*`` directories from an interrupted async save are invisible to
+  ``LATEST`` and to garbage collection, so a crash mid-save falls back to
+  the previous step.
+
 Layout (one directory per step)::
 
     <dir>/step_000042/

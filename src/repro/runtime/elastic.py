@@ -1,16 +1,41 @@
 """Elastic scaling: mesh (re)selection after device loss + state re-shard.
 
+Units and contracts (the operator-facing surface, see docs/OPERATIONS.md):
+
+* :meth:`HeartbeatMonitor.beat` records liveness for one host at the
+  *current* step; :meth:`HeartbeatMonitor.advance` advances the step
+  counter by one and returns the hosts that have now been silent for
+  MORE than ``timeout_steps`` consecutive advances (a host that beat on
+  step ``s`` is declared dead on the first advance where
+  ``step - s > timeout_steps``).  Steps are dimensionless engine/solver
+  iterations, not seconds — the caller owns the cadence.
+* :func:`choose_mesh_shape` takes a surviving *device count* and returns
+  ``(shape, axis_names)`` whose product is exactly that count;
+  :func:`make_mesh_from_devices` materializes it over an explicit device
+  list (first ``prod(shape)`` of ``jax.devices()`` by default).
+* :func:`reshard_state` takes a pytree of arrays (host numpy or device
+  arrays from the *old* mesh), a matching pytree of ``PartitionSpec`` s,
+  and the new mesh; it returns the same values placed under
+  ``NamedSharding(new_mesh, spec)`` per leaf — dtypes and shapes are
+  preserved exactly (placement only, never a cast or reshape).
+
 Recovery protocol (1000+-node design, exercised here on host devices):
 
-1. A heartbeat/membership layer (the launcher) detects failed hosts and
-   reports the surviving device count.
+1. A heartbeat/membership layer (the launcher, or
+   ``runtime.controller.ElasticController`` in-process) detects failed
+   hosts and reports the surviving device count.
 2. ``choose_mesh_shape`` picks the largest valid (pod, data, model)
    factorization that still divides the model's TP requirements —
    preferring to keep 'model' fixed (TP degree is baked into layouts) and
    shrinking 'data' first (pure throughput loss, no re-layout).
-3. The persistent collectives are re-initialized (plans are cheap relative
-   to lost work — the paper's init-vs-iteration amortization argument)
-   and the last checkpoint is restored with the *new* shardings.
+3. The persistent collectives are re-planned through the surviving
+   ``core.cache.PlanCache`` entries (plans are cheap relative to lost
+   work — the paper's init-vs-iteration amortization argument — and a
+   grow-back to a previously seen geometry re-plans *nothing*), via
+   ``amg.distributed.DistributedHierarchy.repartition`` and
+   ``serve.engine.ServeEngine.resize``; solver/model state moves with
+   :func:`reshard_state` or the last checkpoint restored with the *new*
+   shardings.
 
 Straggler mitigation lives in ``straggler.py``; data re-sharding is exact
 because the pipeline is stateless/seekable (see train/data.py).

@@ -14,6 +14,17 @@ keys are roped-zero vectors whose scores are finite but uniform; for
 exactness the engine tracks per-slot validity and re-prefilliing a slot
 resets its cache rows).  Greedy sampling only (argmax) — the framework's
 focus is the communication layer.
+
+Elastic serving (``elastic=True``): :meth:`ServeEngine.resize` drains the
+decode loop mid-stream (every sequence already lives host-side as
+prompt+generated), rebuilds the model on a mesh chosen by
+``runtime.elastic.choose_mesh_shape`` for the surviving device count,
+re-shards the weights with ``reshard_state`` (re-replicating expert
+weights if the EP group size changed), re-plans the MoE dispatch through
+the SAME plan cache (a grow-back to a seen geometry re-plans nothing),
+and resumes by re-prefilling the surviving sequences — exact, because
+admission re-prefill was already the engine's slot-recycling contract.
+Each resize is recorded as a ``runtime.controller.ResizeEvent``.
 """
 from __future__ import annotations
 
@@ -42,45 +53,47 @@ class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 256, adaptive: bool = False,
                  drift_threshold: float = 0.3, drift_warmup: int = 2,
-                 tracer=None):
+                 tracer=None, elastic: bool = False):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
+        self.elastic = elastic
+        self.resize_events: List[object] = []
+        # device-count -> (mesh shape, axis names) this engine has served
+        # on: a grow-back to a seen count reuses that exact geometry, so
+        # every plan/executor for it is still in the cache (ISSUE-7's
+        # "grow-back re-plans nothing" contract)
+        self._seen_geometries: Dict[int, tuple] = {
+            int(model.mesh.devices.size): (tuple(model.mesh.devices.shape),
+                                           tuple(model.mesh.axis_names)),
+        }
+        self._tracer = tracer
+        self._drift_threshold = drift_threshold
+        self._drift_warmup = drift_warmup
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
-        self._prefill = jax.jit(
-            lambda p, i: serving.prefill(model, p, i, max_len=max_len)
-        )
         self.caches = None
         self.cur_len = 0
         self._next_tok = np.zeros((batch_slots, 1), np.int32)
         # dispatch planning is hoisted out of the decode loop: the engine's
         # decode token count is static (one token per slot), so the MoE
-        # dispatch plan is built once here and every decode step hits it
+        # dispatch plan is built once here and every decode step hits it.
+        # Prefill dispatch is planned ONCE for the worst case (B * max_len
+        # tokens) and pinned: admission and elastic re-prefills at every
+        # history length share one plan-cache entry (a grow-back to a seen
+        # device count therefore re-plans nothing).
         self.plan_cache = default_plan_cache()
         self.moe_plan = None
+        self.moe_prefill_plan = None
         self.planner: Optional[AdaptivePlanner] = None
         self.adaptive = adaptive and model.cfg.family == "moe"
         if model.cfg.family == "moe":
             self.moe_plan = self._warm_moe_plan()
+            self.moe_prefill_plan = self._warm_prefill_plan()
+        self._prefill = self._prefill_for(model)
         if self.adaptive:
-            self.planner = AdaptivePlanner(
-                cfg=model.cfg,
-                mesh=model.mesh,
-                tokens_per_lane=serving.moe_tokens_per_lane(model, self.B),
-                plan=self.moe_plan,
-                threshold=drift_threshold,
-                warmup=drift_warmup,
-                # honor a user-pinned transport: re-plans re-fingerprint
-                # under the measured histogram but keep the pinned mode;
-                # only moe_mode="auto" lets drift migrate the transport
-                mode=model.moe_mode,
-                ep_over_pods=model.ep_over_pods,
-                cap_factor=model.moe_cap_factor,
-                cache=self.plan_cache,
-                tracer=tracer,
-            )
+            self.planner = self._make_planner()
         # decode executables keyed per plan geometry (fingerprint
         # stripped): an adaptive re-selection that lands on an
         # already-compiled geometry+mode swaps a dict entry — the
@@ -94,6 +107,39 @@ class ServeEngine:
         decode step re-plans nothing."""
         return serving.moe_plan_for_model(self.model, self.B,
                                           cache=self.plan_cache)
+
+    def _warm_prefill_plan(self):
+        """Worst-case prefill dispatch plan (B * max_len tokens): one
+        plan-cache entry covers every admission / elastic re-prefill
+        regardless of history length (oversized capacity is exact — unused
+        slots get zero combine weight)."""
+        return serving.moe_plan_for_model(self.model, self.B * self.max_len,
+                                          cache=self.plan_cache)
+
+    def _prefill_for(self, model) -> Callable:
+        plan = self.moe_prefill_plan
+        return jax.jit(
+            lambda p, i: serving.prefill(model, p, i, max_len=self.max_len,
+                                         moe_plan=plan)
+        )
+
+    def _make_planner(self) -> AdaptivePlanner:
+        return AdaptivePlanner(
+            cfg=self.model.cfg,
+            mesh=self.model.mesh,
+            tokens_per_lane=serving.moe_tokens_per_lane(self.model, self.B),
+            plan=self.moe_plan,
+            threshold=self._drift_threshold,
+            warmup=self._drift_warmup,
+            # honor a user-pinned transport: re-plans re-fingerprint
+            # under the measured histogram but keep the pinned mode;
+            # only moe_mode="auto" lets drift migrate the transport
+            mode=self.model.moe_mode,
+            ep_over_pods=self.model.ep_over_pods,
+            cap_factor=self.model.moe_cap_factor,
+            cache=self.plan_cache,
+            tracer=self._tracer,
+        )
 
     def _decode_for(self, plan) -> Callable:
         """Decode executable for a dispatch plan, memoized by the
@@ -138,6 +184,15 @@ class ServeEngine:
             return False
         while free and self.queue:
             self.slots[free.pop(0)] = self.queue.pop(0)
+        self._prefill_slots()
+        return True
+
+    def _prefill_slots(self) -> None:
+        """(Re)prefill the batch from the slots' host-side histories.
+
+        Used by admission AND by the elastic resume: each slot's full
+        sequence (prompt + generated so far) re-presents as the prompt, so
+        the caches are exact on whatever mesh the model currently runs."""
         # build the padded prompt batch: each slot's prompt + generated
         seqs = []
         for s in self.slots:
@@ -159,7 +214,103 @@ class ServeEngine:
         self._next_tok = np.asarray(
             jnp.argmax(logits, axis=-1), np.int32
         )[:, None]
-        return True
+
+    # ------------------------------------------------------------- elastic
+    def resize(self, n_devices: Optional[int] = None, devices=None,
+               mesh=None, reason: str = "requested"):
+        """Drain, rebuild on a new device set, and resume mid-decode.
+
+        Pass the surviving ``n_devices`` (mesh chosen by
+        ``runtime.elastic.choose_mesh_shape``, keeping the current TP
+        degree when it still divides) or an explicit ``mesh``.  Weights
+        are pulled to host, re-replicated if the EP group size changed,
+        and ``reshard_state``-placed under the new model's specs; the MoE
+        dispatch re-plans through the engine's plan cache (so a grow-back
+        to a previously served geometry re-plans nothing); active
+        sequences resume by re-prefilling their host-side histories —
+        exact, per the admission contract.  Returns the recorded
+        ``runtime.controller.ResizeEvent``.
+        """
+        assert self.elastic, "construct ServeEngine(..., elastic=True)"
+        import time as _time
+
+        from ..runtime.controller import cache_delta_event
+        from ..runtime.elastic import (
+            MeshRequirements,
+            choose_mesh_shape,
+            make_mesh_from_devices,
+            reshard_state,
+        )
+
+        old = self.model
+        old_n = int(old.mesh.devices.size)
+        # drain: every sequence already lives host-side in its Request
+        # (prompt + generated); only the weights need to come off-mesh
+        host_params = jax.device_get(self.params)
+        before = self.plan_cache.counters()
+        t0 = _time.perf_counter()
+        if mesh is None:
+            seen = self._seen_geometries.get(int(n_devices))
+            if seen is not None:
+                # a geometry this engine already served on: reusing it
+                # keeps every cached plan/executor valid (grow-back warm)
+                shape, axes = seen
+            else:
+                old_tp = dict(zip(old.mesh.axis_names,
+                                  old.mesh.devices.shape)).get("model", 1)
+                # divisors of a working TP degree still divide the model
+                req = MeshRequirements(model_divisors=old_tp,
+                                       prefer_model=old_tp)
+                shape, axes = choose_mesh_shape(int(n_devices), req)
+            mesh = make_mesh_from_devices(shape, axes, devices)
+        self._seen_geometries[int(mesh.devices.size)] = (
+            tuple(mesh.devices.shape), tuple(mesh.axis_names)
+        )
+        new_model = Model(
+            old.cfg, mesh=mesh, moe_mode=old.moe_mode,
+            ep_over_pods=old.ep_over_pods, remat=old.remat, fsdp=old.fsdp,
+            moe_cap_factor=old.moe_cap_factor,
+            scan_layers=old.scan_layers, seq_shard=old.seq_shard,
+        )
+        if old.cfg.family == "moe" and new_model.e_phys != old.e_phys:
+            from ..models.moe import remap_expert_params
+
+            e_log = old.cfg.n_experts
+            host_params = dict(host_params)
+            blocks = dict(host_params["blocks"])
+            blocks["moe"] = remap_expert_params(
+                blocks["moe"], e_log,
+                old.e_phys // e_log, new_model.e_phys // e_log,
+            )
+            host_params["blocks"] = blocks
+        self.model = new_model
+        self.params = reshard_state(
+            host_params, new_model.param_specs(), mesh
+        )
+        # compiled programs are mesh-bound: drop them, re-plan the dispatch
+        # through the shared cache (the plans themselves may warm-hit)
+        self._decode_fns = {}
+        self.moe_plan = None
+        self.moe_prefill_plan = None
+        if new_model.cfg.family == "moe":
+            self.moe_plan = self._warm_moe_plan()
+            self.moe_prefill_plan = self._warm_prefill_plan()
+        self._prefill = self._prefill_for(new_model)
+        if self.adaptive:
+            events = self.planner.events if self.planner is not None else []
+            self.planner = self._make_planner()
+            self.planner.events = events
+        self._decode = self._decode_for(self.moe_plan)
+        # resume: re-prefill the surviving sequences on the new mesh
+        self.caches = None
+        if any(s is not None for s in self.slots):
+            self._prefill_slots()
+        event = cache_delta_event(
+            self.plan_cache, before, reason,
+            old_n, int(mesh.devices.size), _time.perf_counter() - t0,
+        )
+        self.resize_events.append(event)
+        return event
 
     def step(self) -> List[Request]:
         """One engine step: admit if possible, else decode one token for

@@ -134,6 +134,34 @@ def partitioned_from_blocks(
     )
 
 
+def partitioned_to_global(part: PartitionedCSR) -> CSR:
+    """Reassemble the global CSR from a :class:`PartitionedCSR`.
+
+    The inverse of :func:`partition_rect_csr`: merges each rank's local
+    (column-shifted back by ``col_offsets[p]``) and ghost (columns mapped
+    back through ``needs[p]``) blocks and stacks the row blocks.  Values
+    are carried bit-exactly; used by the elastic path to repartition a
+    hierarchy that was built distributed (``setup_partitioned``) and so
+    never had a global operator to begin with.
+    """
+    blocks: List[CSR] = []
+    for p in range(part.n_procs):
+        clo = int(part.col_offsets[p])
+        loc, gh = part.local[p], part.ghost[p]
+        rows = np.concatenate([loc.row_indices(), gh.row_indices()])
+        cols = np.concatenate([
+            loc.indices.astype(np.int64) + clo,
+            part.needs[p][gh.indices.astype(np.int64)]
+            if len(gh.indices) else np.zeros(0, dtype=np.int64),
+        ])
+        vals = np.concatenate([loc.data, gh.data])
+        blocks.append(
+            CSR.from_coo(rows, cols, vals,
+                         (loc.nrows, int(part.col_offsets[-1])))
+        )
+    return stack_blocks(blocks, ncols=int(part.col_offsets[-1]))
+
+
 def partition_rect_csr(
     A: CSR, row_offsets: np.ndarray, col_offsets: np.ndarray
 ) -> PartitionedCSR:

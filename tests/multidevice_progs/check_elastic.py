@@ -1,0 +1,221 @@
+"""Subprocess: the elastic/straggler layer end to end on 8 host devices.
+
+Four contracts (the ISSUE-7 acceptance criteria):
+
+1. **Mid-solve shrink** — k V-cycle iterations on 8 procs, repartition to
+   4 via ``DistributedHierarchy.repartition``, warm-start the remaining m
+   iterations with ``solve(x0=)``: the final iterate matches a cold
+   4-proc solve of k+m iterations to 1e-12 (the stationary iteration is
+   contracting, so the only divergence is fp reduction order).
+2. **Grow back** — repartitioning 4 -> 8 through the same ``PlanCache``
+   re-plans ZERO patterns (every 8-proc pattern survives in the cache);
+   asserted via the attached ``ResizeEvent``'s cache-counter delta.
+3. **Mid-decode shrink** — a ``ServeEngine(elastic=True)`` decoding a
+   float64 MoE model on 8 devices resizes to 4 mid-stream; the generated
+   tokens are identical and the final-step logits match a cold 4-device
+   engine to 1e-12.
+4. **Straggler** — an injected 3x-slow host flagged by the controller
+   triggers exactly ONE rebalance+refit event: the rebuilt hierarchy's
+   row blocks shrink on the slow host and its MachineParams come from
+   ``fit_trace`` over the recorded exchange samples.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.amg.hierarchy import build_hierarchy
+from repro.amg.distributed import DistributedHierarchy
+from repro.core.cache import PlanCache
+from repro.profile.trace import TraceRecorder
+from repro.runtime import ElasticController, StragglerConfig
+from repro.sparse.csr import CSR
+
+
+def poisson2d(nx: int) -> CSR:
+    n = nx * nx
+    rows, cols, vals = [], [], []
+    for i in range(nx):
+        for j in range(nx):
+            k = i * nx + j
+            rows.append(k); cols.append(k); vals.append(4.0)
+            for di, dj in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                ii, jj = i + di, j + dj
+                if 0 <= ii < nx and 0 <= jj < nx:
+                    rows.append(k); cols.append(ii * nx + jj)
+                    vals.append(-1.0)
+    return CSR.from_coo(np.array(rows), np.array(cols), np.array(vals),
+                        (n, n))
+
+
+def mesh_n(n: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:n]), ("proc",))
+
+
+def check_solve_shrink_grow():
+    A = poisson2d(28)
+    h = build_hierarchy(A)
+    cache = PlanCache()
+    dh8 = DistributedHierarchy.setup(h, mesh_n(8), "proc", cache=cache)
+    b = np.random.default_rng(0).normal(size=A.nrows)
+    k, m = 4, 4
+
+    # k iterations on 8 procs, then the device set shrinks to 4
+    x_mid, _ = dh8.solve(b, tol=0.0, max_iters=k)
+    dh4 = dh8.repartition(mesh_n(4), reason="heartbeat")
+    ev_shrink = dh4.last_resize
+    print(f"shrink: {ev_shrink}")
+    assert ev_shrink.old_n == 8 and ev_shrink.new_n == 4
+    assert ev_shrink.plan_misses > 0, "first 4-proc build must plan"
+    x_elastic, _ = dh4.solve(b, tol=0.0, max_iters=m, x0=x_mid)
+
+    # cold start on 4 devices, same total iterations
+    dh4_cold = DistributedHierarchy.setup(h, mesh_n(4), "proc",
+                                          cache=PlanCache())
+    x_cold, _ = dh4_cold.solve(b, tol=0.0, max_iters=k + m)
+    err = np.abs(x_elastic - x_cold).max() / max(np.abs(x_cold).max(),
+                                                 1e-300)
+    print(f"mid-solve shrink vs cold-start rel err: {err:.3e}")
+    assert err < 1e-12, err
+
+    # grow back to 8: every pattern must come out of the cache
+    dh8b = dh4.repartition(mesh_n(8), reason="requested")
+    ev_grow = dh8b.last_resize
+    print(f"grow:   {ev_grow}")
+    assert ev_grow.plan_misses == 0, ev_grow
+    assert ev_grow.exec_misses == 0, ev_grow
+    assert ev_grow.plan_hits > 0 and ev_grow.warm
+    x_back, _ = dh8b.solve(b, tol=0.0, max_iters=k + m)
+    err2 = np.abs(x_back - x_cold).max() / max(np.abs(x_cold).max(), 1e-300)
+    assert err2 < 1e-10, err2
+    print("solve shrink/grow OK")
+
+
+def check_decode_shrink():
+    from repro.configs import reduced
+    from repro.models import Model
+    from repro.serve import Request, ServeEngine
+
+    cfg0 = reduced("mixtral-8x7b")
+    # float64 end to end: the 1e-12 contract is unreachable in f32
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float64,
+                            "n_experts": 8, "top_k": 2})
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+               for _ in range(2)]
+
+    def make_engine(n_dev: int):
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+        model = Model(cfg, mesh=mesh, moe_mode="auto", remat=False,
+                      moe_cap_factor=8.0)
+        params = model.init_params(seed=0)
+        return ServeEngine(model, params, batch_slots=2, max_len=64,
+                           elastic=True)
+
+    def submit_all(eng):
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=10))
+
+    def last_logits(eng):
+        out = eng._decode(
+            eng.params, {"tokens": jnp.asarray(eng._next_tok)},
+            eng.caches, jnp.asarray(eng.cur_len, jnp.int32),
+        )
+        return np.asarray(out[0])
+
+    # elastic: admit + 4 decode steps on 8, shrink to 4, 4 more steps
+    eng = make_engine(8)
+    submit_all(eng)
+    for _ in range(5):
+        eng.step()
+    ev = eng.resize(4, reason="heartbeat")
+    print(f"serve shrink: {ev}")
+    assert ev.old_n == 8 and ev.new_n == 4
+    for _ in range(4):
+        eng.step()
+    toks_elastic = [list(s.generated) for s in eng.slots]
+    logits_elastic = last_logits(eng)
+
+    # cold start on 4 devices, same number of steps
+    eng4 = make_engine(4)
+    submit_all(eng4)
+    for _ in range(9):
+        eng4.step()
+    toks_cold = [list(s.generated) for s in eng4.slots]
+    assert toks_elastic == toks_cold, (toks_elastic, toks_cold)
+    logits_cold = last_logits(eng4)
+    err = np.abs(logits_elastic - logits_cold).max() / max(
+        np.abs(logits_cold).max(), 1e-300
+    )
+    print(f"mid-decode shrink vs cold-start logits rel err: {err:.3e}")
+    assert err < 1e-12, err
+
+    # grow back to 8 through the same engine cache: the dispatch plan for
+    # the 8-device geometry survives -> zero new plan misses
+    ev_grow = eng.resize(8, reason="requested")
+    print(f"serve grow:   {ev_grow}")
+    assert ev_grow.plan_misses == 0, ev_grow
+    for _ in range(2):
+        eng.step()
+    print("decode shrink/grow OK")
+
+
+def check_straggler():
+    A = poisson2d(24)
+    h = build_hierarchy(A)
+    cache = PlanCache()
+    tracer = TraceRecorder()
+    dh = DistributedHierarchy.setup(h, mesh_n(8), "proc", cache=cache)
+    dh.measure_exchange_seconds(iters=2, warmup=1, tracer=tracer)
+
+    ctrl = ElasticController(
+        8, cache=cache, tracer=tracer,
+        straggler_cfg=StragglerConfig(patience=3), cooldown=8,
+    )
+    base = np.full(8, 0.010)
+    n_events = 0
+    for t in range(24):
+        times = base.copy()
+        if n_events == 0:
+            times[2] *= 3.0          # injected straggler on host 2
+        times *= 1.0 + 0.01 * np.sin(t)   # benign jitter
+        flagged = ctrl.observe_step_times(times)
+        if flagged:
+            assert flagged == [2], flagged
+            dh, ev = ctrl.mitigate_hierarchy(dh, flagged)
+            n_events += 1
+            print(f"mitigation: {ev}")
+            # host 2 gets the fewest rows on the fine level
+            rows = np.diff(dh.levels[0].A.part.offsets)
+            print(f"fine-level rows/host after rebalance: {rows}")
+            assert rows[2] == rows.min() and rows[2] < rows.max(), rows
+            assert ev.refit and ev.params_name == "straggler-refit", ev
+            assert dh.params.name == "straggler-refit"
+    assert len(ctrl.rebalance_events) == 1, ctrl.rebalance_events
+    assert n_events == 1
+    # the rebalanced hierarchy still solves
+    b = np.random.default_rng(2).normal(size=A.nrows)
+    x, hist = dh.solve(b, tol=1e-8, max_iters=40)
+    assert hist[-1] < 1e-8, hist[-1]
+    r = b - A.matvec(x)
+    assert np.linalg.norm(r) / np.linalg.norm(b) < 1e-6
+    print("straggler mitigation OK")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    check_solve_shrink_grow()
+    check_decode_shrink()
+    check_straggler()
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

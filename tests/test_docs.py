@@ -1,0 +1,27 @@
+"""Docs stay wired: the link/anchor check runs in tier-1 (fast half of
+the CI docs job; the snippet execution half runs in CI only)."""
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_links():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"),
+         "--links-only"],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+
+
+def test_docs_exist_and_crosslinked():
+    arch = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    ops = (REPO / "docs" / "OPERATIONS.md").read_text()
+    readme = (REPO / "README.md").read_text()
+    assert "OPERATIONS.md" in arch and "ARCHITECTURE.md" in ops
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/OPERATIONS.md" in readme
+    # the quickstart convention the CI docs job depends on
+    assert "```python" in arch

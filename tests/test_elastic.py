@@ -1,0 +1,45 @@
+"""Integration: the elastic/straggler runtime layer on 8 virtual devices.
+
+The heavy check (mid-solve and mid-decode shrink vs cold start, warm
+grow-back via plan-cache counters, injected-straggler rebalance+refit)
+runs in a subprocess with XLA_FLAGS set at spawn so the main pytest
+process keeps its device configuration.  Single-process edge cases of the
+same machinery live in test_runtime.py.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+PROGS = pathlib.Path(__file__).parent / "multidevice_progs"
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def run_prog(name: str, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, str(PROGS / name)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_elastic_solve_serve_straggler():
+    out = run_prog("check_elastic.py")
+    assert "ALL_OK" in out
+    # mid-solve shrink matches cold start; grow-back re-plans nothing
+    assert "solve shrink/grow OK" in out
+    assert "grow:   resize[requested] 4->8 procs: warm" in out
+    # mid-decode shrink matches cold start; serve grow-back is warm too
+    assert "decode shrink/grow OK" in out
+    assert "serve grow:   resize[requested] 4->8 procs: warm" in out
+    # exactly one rebalance+refit episode for the injected straggler
+    assert out.count("mitigation: rebalance@") == 1
+    assert "straggler mitigation OK" in out

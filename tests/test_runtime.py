@@ -8,16 +8,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from jax.sharding import Mesh, PartitionSpec as P
+
 from repro.configs import reduced
 from repro.models import Model
 from repro.runtime import (
     CheckpointManager,
+    ElasticController,
     HeartbeatMonitor,
     MeshRequirements,
+    StragglerConfig,
     StragglerDetector,
     choose_mesh_shape,
     latest_step,
     rebalance_shards,
+    reshard_state,
     restore_checkpoint,
     save_checkpoint,
 )
@@ -157,3 +162,119 @@ def test_crash_restart_training_continuity(tmp_path):
     restored = jax.tree.map(jnp.asarray, restored)
     _, l_b = run(restored, 3, 6)
     np.testing.assert_array_equal(l_b, l_b_truth)
+
+
+# --------------------------------------------------------------------------
+# elastic/straggler edge cases (the single-process half of test_elastic.py)
+# --------------------------------------------------------------------------
+
+
+def test_rebalance_single_host_is_identity():
+    """One host has nobody to shed rows to: the rebalance degenerates to
+    the identity [total_rows] no matter the weight."""
+    for w in (1e-9, 0.01, 3.7):
+        counts = rebalance_shards(np.array([w]), total_rows=64)
+        assert counts.tolist() == [64]
+    # and a uniform fleet stays (near-)uniform
+    counts = rebalance_shards(np.full(4, 0.02), total_rows=64)
+    assert counts.sum() == 64 and counts.max() - counts.min() <= 1
+
+
+def test_straggler_all_slow_is_not_flagged():
+    """A uniformly degraded fleet is a calibration problem, not an
+    eviction: when every host trips the threshold the update returns []."""
+    det = StragglerDetector(4, StragglerConfig(threshold=0.5, patience=2))
+    flagged = []
+    for _ in range(6):
+        # every host above 0.5x the median -> the whole fleet is "slow"
+        flagged = det.update(np.full(4, 0.02))
+    assert (det.flags >= det.cfg.patience).all()
+    assert flagged == []
+
+
+def test_straggler_flapping_hysteresis():
+    """A host that flaps (alternates slow/normal) never accumulates
+    ``patience`` consecutive flags; after a mitigation, the detector reset
+    + controller cooldown keep the handled episode from storming."""
+    det = StragglerDetector(4, StragglerConfig(ewma=1.0, patience=3))
+    base = np.full(4, 0.01)
+    for t in range(12):
+        times = base.copy()
+        if t % 2 == 0:
+            times[1] *= 3.0          # flaps: slow only every other step
+        assert det.update(times) == []
+
+    # persistent slowness DOES trip it ...
+    ctrl = ElasticController(
+        4, straggler_cfg=StragglerConfig(ewma=1.0, patience=3), cooldown=5)
+    slow = base.copy()
+    slow[1] *= 3.0
+    flagged = []
+    for _ in range(3):
+        flagged = ctrl.observe_step_times(slow)
+    assert flagged == [1]
+    # ... and after the mitigation's reset + cooldown, a host that went
+    # back to normal never re-triggers: the handled episode is closed
+    ctrl.detector.reset(reseed_times=True)
+    ctrl._cooldown_left = ctrl.cooldown
+    for _ in range(ctrl.cooldown + 6):
+        assert ctrl.observe_step_times(base) == []
+    # whereas a host that is STILL slow post-mitigation re-flags only
+    # once the cooldown has fully drained (escalation, not a storm)
+    ctrl.detector.reset(reseed_times=True)
+    ctrl._cooldown_left = ctrl.cooldown
+    for _ in range(ctrl.cooldown):
+        assert ctrl.observe_step_times(slow) == []
+    assert ctrl.observe_step_times(slow) == [1]
+
+
+def test_reshard_state_preserves_dtype_and_shape():
+    """reshard_state is placement-only: dtypes/shapes/values survive a
+    move onto a smaller mesh exactly (including bf16 and int leaves)."""
+    devs = jax.devices()
+    big = Mesh(np.array(devs), ("data",))
+    small = Mesh(np.array(devs[:1]), ("data",))
+    rng = np.random.default_rng(3)
+    state = {
+        "w": jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32)),
+        "h": jnp.asarray(rng.normal(size=(2, 2)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+        "n": jnp.asarray(rng.integers(0, 99, size=(5,)).astype(np.int32)),
+    }
+    specs = {"w": P(), "h": P(), "n": P()}
+    on_big = reshard_state(state, specs, big)
+    on_small = reshard_state(on_big, specs, small)
+    for k in state:
+        assert on_small[k].dtype == state[k].dtype, k
+        assert on_small[k].shape == state[k].shape, k
+        np.testing.assert_array_equal(
+            np.asarray(on_small[k].astype(jnp.float32)),
+            np.asarray(state[k].astype(jnp.float32)),
+        )
+
+
+def test_restore_latest_ignores_partial_async_save(tmp_path):
+    """A crash mid-async-save leaves a step_N.tmp-* directory; LATEST,
+    restore and gc must all treat it as invisible and fall back to the
+    newest complete checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = sample_tree()
+    mgr.save(1, tree)
+    mgr.wait()
+    # simulate a writer that died mid-save of step 2: partial tmp dir,
+    # some leaves on disk, no manifest rename, LATEST untouched
+    partial = os.path.join(str(tmp_path), "step_000000002.tmp-4242-7")
+    os.makedirs(partial)
+    open(os.path.join(partial, "leaf_00000.bin"), "wb").write(b"\x00" * 16)
+    assert latest_step(str(tmp_path)) == 1
+    step, got = mgr.restore_latest(tree)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # the next successful save gc-sweeps by step number and must not trip
+    # over (or delete) the foreign tmp dir either
+    mgr.save(3, tree)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 3
+    assert os.path.isdir(partial)

@@ -1,0 +1,142 @@
+"""Docs gate: relative-link/anchor check + runnable quickstart snippets.
+
+Two checks over README.md and docs/*.md:
+
+1. **Links** (``--links-only`` stops here): every relative markdown link
+   must point at a file that exists in the checkout, and every
+   ``#fragment`` must match a heading slug (GitHub slugger rules) in the
+   target file.  External links (``http(s)://``, ``mailto:``) and links
+   that resolve outside the repo (the CI badge's ``../../actions/...``)
+   are skipped — this container has no network.
+2. **Snippets**: the fenced ```python blocks of docs/ARCHITECTURE.md are
+   concatenated top-to-bottom into one script (later snippets may build
+   on earlier ones — the documented convention) and executed in a
+   subprocess on 8 virtual devices.  A quickstart that drifts from the
+   API fails CI instead of rotting.
+
+    PYTHONPATH=src python tools/check_docs.py [--links-only]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+SNIPPET_FILE = REPO / "docs" / "ARCHITECTURE.md"
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets are files and should exist too
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+
+
+def heading_slugs(path: pathlib.Path) -> set:
+    """GitHub-style slugs of every markdown heading in ``path``."""
+    slugs = set()
+    counts: dict = {}
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        text = line.lstrip("#").strip()
+        # strip markdown emphasis/code markers, then slugify
+        text = re.sub(r"[*_`]", "", text)
+        slug = re.sub(r"[^\w\- ]", "", text.lower()).strip()
+        slug = re.sub(r" +", "-", slug)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"{doc}: missing doc file")
+            continue
+        in_fence = False
+        for lineno, line in enumerate(doc.read_text().splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path_part, _, frag = target.partition("#")
+                base = doc.parent / path_part if path_part else doc
+                base = pathlib.Path(os.path.normpath(base))
+                if REPO not in base.parents and base != REPO:
+                    continue   # escapes the checkout (CI badge etc.)
+                if not base.exists():
+                    errors.append(f"{doc.relative_to(REPO)}:{lineno}: "
+                                  f"broken link -> {target}")
+                    continue
+                if frag and base.suffix == ".md":
+                    if frag.lower() not in heading_slugs(base):
+                        errors.append(
+                            f"{doc.relative_to(REPO)}:{lineno}: "
+                            f"broken anchor -> {target}")
+    return errors
+
+
+def run_snippets() -> int:
+    blocks = FENCE_RE.findall(SNIPPET_FILE.read_text())
+    if not blocks:
+        print(f"check_docs: no python snippets in {SNIPPET_FILE}",
+              file=sys.stderr)
+        return 1
+    script = "\n\n".join(b.strip("\n") for b in blocks) + "\n"
+    env = dict(os.environ)
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=".py", delete=False) as f:
+        f.write(script)
+        tmp = f.name
+    try:
+        print(f"check_docs: executing {len(blocks)} snippet(s) from "
+              f"{SNIPPET_FILE.relative_to(REPO)}")
+        proc = subprocess.run([sys.executable, tmp], env=env, timeout=600)
+        return proc.returncode
+    finally:
+        os.unlink(tmp)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the ARCHITECTURE.md snippets")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    n_links = sum(1 for _ in DOC_FILES)
+    print(f"check_docs: links OK across {n_links} file(s)"
+          if not errors else f"check_docs: {len(errors)} link error(s)")
+    if errors:
+        return 1
+    if args.links_only:
+        return 0
+    rc = run_snippets()
+    print("check_docs: snippets OK" if rc == 0
+          else f"check_docs: snippet run failed (exit {rc})")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
