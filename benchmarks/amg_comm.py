@@ -231,7 +231,8 @@ def measured_setup_exchange(
         )
         if tracer is not None:
             tracer.record_plan(coll.plan, secs,
-                               label=f"setup/L{rec.level}/{rec.phase}")
+                               label=f"setup/L{rec.level}/{rec.phase}",
+                               pure_exchange=True)
         out.append(
             (f"L{rec.level}/{rec.phase}", coll.strategy, secs)
         )
@@ -288,6 +289,7 @@ def measured_device_exchange(
             dtype=np.float64, iters=iters, warmup=warmup,
         )
         if tracer is not None:
-            tracer.record_plan(coll.plan, secs, label=f"amg/L{lvl}")
+            tracer.record_plan(coll.plan, secs, label=f"amg/L{lvl}",
+                               pure_exchange=True)
         out.append((lvl, coll.strategy, secs))
     return out

@@ -281,6 +281,64 @@ def calibration_rows(rows: int, out_dir: pathlib.Path, smoke: bool,
     return out
 
 
+def verify_rows(rows: int):
+    """Wall time of the static plan/kernel verifier (``repro.verify``) —
+    what ``REPRO_VERIFY=1`` adds on top of plan construction.  Each row
+    times one full verification sweep (structure + conservation + device
+    plan + layouts + kernel budgets) over plans built beforehand, so the
+    number is the verifier alone; kind=measured-host rows are
+    band-compared by ``benchmarks.compare``, never exact."""
+    import jax
+
+    from repro.amg import DistributedHierarchy, build_hierarchy, diffusion_2d
+    from repro.configs import reduced
+    from repro.core import PlanCache
+    from repro.models.moe import moe_plan_for
+    from repro.verify import verify_hierarchy, verify_moe_dispatch
+
+    n = max(int(round(rows ** 0.5)), 16)
+    n_procs = jax.device_count()
+    mesh = jax.make_mesh((n_procs,), ("proc",))
+    A = diffusion_2d(n, n)
+    cache = PlanCache()
+    out = []
+
+    for label, kwargs in (
+        ("hierarchy", {}),
+        ("hierarchy_blocked",
+         {"spmv_variant": "blocked", "spmv_block_cols": 64}),
+    ):
+        dh = DistributedHierarchy.setup(
+            build_hierarchy(A), mesh, procs_per_region=4, cache=cache,
+            **kwargs,
+        )
+        t0 = time.perf_counter()
+        counts = verify_hierarchy(dh)
+        dt = time.perf_counter() - t0
+        out.append((
+            f"verify/wall_seconds/{label}", dt * 1e6,
+            f"kind=measured-host|seconds={dt:.4f}"
+            f"|levels={counts.get('levels', 0)}"
+            f"|collectives={counts.get('collectives', 0)}"
+            f"|partitions={counts.get('partitions', 0)}",
+        ))
+
+    cfg = reduced("mixtral-8x7b")
+    moe_mesh = jax.make_mesh((1, n_procs), ("data", "model"))
+    modes = ("a2a", "hier", "hier_dedup")
+    plans = [moe_plan_for(cfg, moe_mesh, 64, mode=m, cache=cache)
+             for m in modes]
+    t0 = time.perf_counter()
+    for plan in plans:
+        verify_moe_dispatch(plan, 64)
+    dt = time.perf_counter() - t0
+    out.append((
+        "verify/wall_seconds/moe_dispatch", dt * 1e6,
+        f"kind=measured-host|seconds={dt:.4f}|modes={len(modes)}",
+    ))
+    return out
+
+
 def build_sections(rows: int, smoke: bool, tracer=None):
     """Section list; ``tracer`` (set by --calibrate) makes the measured
     sections record their timings so the calibration fit reuses them
@@ -356,6 +414,12 @@ def main(argv=None) -> int:
         "benchmarks/results/smoke.json)",
     )
     ap.add_argument(
+        "--verify", action="store_true",
+        help="time the static plan/kernel verifier (repro.verify) over the "
+        "smoke hierarchy + MoE plans and report verify/wall_seconds/* rows "
+        "(always on in --smoke)",
+    )
+    ap.add_argument(
         "--calibrate", action="store_true",
         help="run the measure->fit->re-select calibration loop: measure "
         "real exchanges, fit MachineParams (repro.profile), rerun the "
@@ -379,6 +443,8 @@ def main(argv=None) -> int:
 
         tracer = TraceRecorder()   # shared: measured sections feed the fit
     sections = build_sections(rows, args.smoke, tracer)
+    if args.smoke or args.verify:
+        sections.append(("verify", lambda: verify_rows(rows)))
     if args.calibrate:
         art_dir = (pathlib.Path(out_path).parent if out_path
                    else pathlib.Path(__file__).parent / "results")

@@ -330,7 +330,8 @@ def measured_overlap_rows(rows: int, tracer=None):
     t_x = time_executor(exchange, n_procs, bell.in_pad,
                         dtype=np.float64, iters=10, warmup=2)
     if tracer is not None:
-        tracer.record_plan(coll.plan, t_x, label="spmv_overlap/exchange")
+        tracer.record_plan(coll.plan, t_x, label="spmv_overlap/exchange",
+                           pure_exchange=True)
     times = {}
     for mode, fn in fns.items():
         times[mode] = _time_fn(fn, xg, iters=10, warmup=2)

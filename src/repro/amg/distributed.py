@@ -621,7 +621,8 @@ class DistributedHierarchy:
             )
             if tracer is not None:
                 tracer.record_plan(lv.A.coll.plan, secs,
-                                   label=f"amg/L{lv.index}")
+                                   label=f"amg/L{lv.index}",
+                                   pure_exchange=True)
             out.append((lv.index, lv.A.strategy, secs))
         return out
 

@@ -42,15 +42,40 @@ from .neighborhood import NeighborAlltoallV
 from .plan import CommPattern, Topology
 
 
+def _hash_array(h, name: str, arr: np.ndarray) -> None:
+    """Feed one array to the hash with an unambiguous framing.
+
+    The field name, dtype, rank and shape are encoded ahead of the raw
+    bytes, so two patterns whose arrays happen to serialize to the same
+    byte stream (e.g. an int32 array vs the int64 half its length, or
+    needs lists split at different boundaries) cannot collide, and the
+    digest is a pure function of content — identical across processes
+    and interpreter runs (no ``PYTHONHASHSEED`` anywhere).
+    """
+    a = np.ascontiguousarray(arr)
+    h.update(name.encode())
+    h.update(b"\x00")
+    h.update(str(a.dtype).encode())
+    h.update(np.asarray([a.ndim, *a.shape], dtype=np.int64).tobytes())
+    h.update(a.tobytes())
+
+
 def pattern_fingerprint(pattern: CommPattern) -> str:
-    """Content hash of a pattern: equal content -> equal fingerprint."""
+    """Content hash of a pattern: equal content -> equal fingerprint.
+
+    Canonical by construction: fields are hashed in a fixed order, each
+    framed with its name/dtype/shape (:func:`_hash_array`), and the
+    variable-length ``needs`` list is prefixed with its count — the same
+    pattern fingerprints identically in every process, and distinct
+    patterns cannot alias through ambiguous byte concatenation.
+    """
     h = hashlib.blake2b(digest_size=16)
-    h.update(np.ascontiguousarray(pattern.owner_proc).tobytes())
-    h.update(np.ascontiguousarray(pattern.owner_slot).tobytes())
-    h.update(np.ascontiguousarray(pattern.n_local).tobytes())
-    for need in pattern.needs:
-        h.update(np.ascontiguousarray(need).tobytes())
-        h.update(b"|")
+    _hash_array(h, "owner_proc", pattern.owner_proc)
+    _hash_array(h, "owner_slot", pattern.owner_slot)
+    _hash_array(h, "n_local", pattern.n_local)
+    h.update(np.int64(len(pattern.needs)).tobytes())
+    for q, need in enumerate(pattern.needs):
+        _hash_array(h, f"needs[{q}]", need)
     return h.hexdigest()
 
 
@@ -122,6 +147,15 @@ class PlanCache:
         return entry
 
     def _insert(self, store: Dict, key, value, ns: str) -> None:
+        # Verification-on-insertion: every plan entering the cache is
+        # checked once, at the only choke point all five plan producers
+        # share, then served from the cache unverified (hits are free).
+        # The import is lazy (repro.verify imports core) and the knob is
+        # read per insert so tests can flip it at runtime.
+        from ..verify import verify_cache_value, verify_enabled
+
+        if verify_enabled():
+            verify_cache_value(ns, value)
         if self.max_entries > 0 and len(store) >= self.max_entries:
             store.pop(next(iter(store)))   # least-recently used
             self.evictions += 1
@@ -174,6 +208,13 @@ class PlanCache:
             return fn
         self.exec_misses += 1
         fn = coll.bind(mesh, axis_name)
+        # The jaxpr audit needs the collective's DevicePlan, which only
+        # this frame still has next to the bound callable — so executors
+        # are audited here rather than in _insert (where they are opaque).
+        from ..verify import audit_executor, verify_enabled
+
+        if verify_enabled():
+            audit_executor(fn, coll.device_plan, axis_name)
         self._insert(self._execs, key, fn, "executor")
         return fn
 

@@ -114,7 +114,7 @@ def synthesize_trace(
     tr = TraceRecorder()
     for i, plan in enumerate(plans):
         tr.record_plan(plan, plan_time(plan, params),
-                       label=f"{label_prefix}/{i}")
+                       label=f"{label_prefix}/{i}", pure_exchange=True)
     return tr
 
 

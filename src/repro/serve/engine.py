@@ -101,6 +101,31 @@ class ServeEngine:
         self._decode_fns: Dict[object, Callable] = {}
         self._decode = self._decode_for(self.moe_plan)
 
+    def verify(self) -> Dict[str, int]:
+        """Statically verify the engine's live MoE dispatch plans.
+
+        Runs ``repro.verify``'s geometry + token-conservation checks over
+        the decode-step and worst-case-prefill plans (dense/non-MoE
+        families have nothing to dispatch and verify trivially).  Raises
+        :class:`repro.verify.VerifyError` with a rank/slot diagnostic on
+        the first violated invariant; returns check counts otherwise.
+        Independent of ``REPRO_VERIFY`` — calling it is the opt-in.
+        """
+        from repro.verify import verify_moe_dispatch
+
+        counts = {"moe_plans": 0}
+        for plan, n_tokens in (
+            (self.moe_plan, self.B),
+            (self.moe_prefill_plan, self.B * self.max_len),
+        ):
+            if plan is None:
+                continue
+            verify_moe_dispatch(
+                plan, serving.moe_tokens_per_lane(self.model, n_tokens)
+            )
+            counts["moe_plans"] += 1
+        return counts
+
     def _warm_moe_plan(self):
         """Pre-plan the decode-step MoE dispatch through the same helper
         `_moe_ffn` keys with (n_tokens = batch_slots), so even the first

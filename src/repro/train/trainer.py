@@ -35,7 +35,7 @@ class TrainState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class TrainerConfig:
-    opt: AdamWConfig = AdamWConfig()
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
     microbatches: int = 1        # gradient accumulation
     compress_grads: bool = False
 

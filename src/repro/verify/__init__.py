@@ -1,0 +1,146 @@
+"""repro.verify — static plan/kernel verification.
+
+The planners hand the whole communication pattern to the runtime; this
+package checks the whole pattern.  Three passes:
+
+* :mod:`.invariants` — host-side structural checks over patterns, plans,
+  partitions, device ELL layouts and MoE dispatch geometry (conservation,
+  duality, round conflict-freedom, bucket exhaustiveness).
+* :mod:`.jaxpr_audit` — trace bound executors and prove the compiled
+  collective sequence matches the frozen DevicePlan (SPMD uniformity; no
+  collective under data-dependent control flow).
+* :mod:`.kernel_budget` — the Pallas kernels' actual BlockSpec footprints
+  agree with the modeled VMEM estimators, and bucket-skip maps cover every
+  nonzero exactly once.
+
+Entry points: :func:`verify_hierarchy` sweeps every operator of a
+``DistributedHierarchy``; ``ServeEngine.verify()`` checks a serving
+engine's MoE plans; ``PlanCache`` calls :func:`verify_cache_value` /
+:func:`audit_executor` on insertion when :func:`verify_enabled` — i.e.
+``REPRO_VERIFY=1`` (tests/CI default via ``test.sh``; unset in production
+hot paths).  All failures raise :class:`VerifyError` with a diagnostic
+naming the offending rank / slot / bucket.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+from .invariants import (
+    VerifyError,
+    verify_cache_value,
+    verify_collective,
+    verify_device_ell,
+    verify_device_plan,
+    verify_ell_blocked,
+    verify_moe_dispatch,
+    verify_moe_plan,
+    verify_partition,
+    verify_pattern,
+    verify_plan,
+    verify_round_schedule,
+)
+from .jaxpr_audit import (
+    COLLECTIVE_PRIMITIVES,
+    CollectiveRecord,
+    audit_executor,
+    collective_signature,
+    trace_collectives,
+)
+from .kernel_budget import (
+    blocked_kernel_actual_bytes,
+    check_bucket_map,
+    flat_kernel_actual_bytes,
+    verify_bucket_map,
+    verify_kernel_budget,
+)
+
+__all__ = [
+    "VerifyError",
+    "verify_enabled",
+    "verify_pattern",
+    "verify_round_schedule",
+    "verify_plan",
+    "verify_device_plan",
+    "verify_collective",
+    "verify_partition",
+    "verify_device_ell",
+    "verify_ell_blocked",
+    "verify_moe_plan",
+    "verify_moe_dispatch",
+    "verify_cache_value",
+    "COLLECTIVE_PRIMITIVES",
+    "CollectiveRecord",
+    "collective_signature",
+    "trace_collectives",
+    "audit_executor",
+    "flat_kernel_actual_bytes",
+    "blocked_kernel_actual_bytes",
+    "verify_kernel_budget",
+    "check_bucket_map",
+    "verify_bucket_map",
+    "verify_dist_op",
+    "verify_hierarchy",
+]
+
+
+def verify_enabled() -> bool:
+    """Whether plan-cache insertions verify (``REPRO_VERIFY``).
+
+    Read per call, not at import, so tests and operators can flip it at
+    runtime.  On by default in tests/CI (``test.sh`` exports it); leave it
+    unset in production hot paths — verification is host-side numpy over
+    plan metadata, cheap next to planning but not free.
+    """
+    return os.environ.get("REPRO_VERIFY", "0").lower() in ("1", "true", "on")
+
+
+def verify_dist_op(op, *, value_bytes: int = 8) -> Dict[str, int]:
+    """All static checks for one distributed operator (a ``DistOp``):
+    partition, bound collective, device layout, kernel budget, and — for
+    blocked layouts — bucket-map exhaustiveness over the full window and
+    both overlap windows (local / ghost) when an exchange exists."""
+    counts: Dict[str, int] = {}
+
+    def tick(k: str) -> None:
+        counts[k] = counts.get(k, 0) + 1
+
+    verify_partition(op.part)
+    tick("partitions")
+    if op.coll is not None:
+        verify_collective(op.coll)
+        tick("collectives")
+    ell = op.ell
+    if hasattr(ell, "bucket_K"):
+        verify_ell_blocked(ell, op.part)
+        verify_bucket_map(ell)
+        if op.coll is not None and ell.n_ghost_buckets:
+            verify_bucket_map(ell, bucket_hi=ell.n_local_buckets)
+            verify_bucket_map(ell, bucket_lo=ell.n_local_buckets)
+        tick("blocked_layouts")
+    else:
+        verify_device_ell(ell, op.part)
+        tick("flat_layouts")
+    verify_kernel_budget(ell, op.kernel, value_bytes=value_bytes)
+    tick("kernel_budgets")
+    return counts
+
+
+def verify_hierarchy(h) -> Dict[str, int]:
+    """Sweep every operator (A, R, P per level) of a
+    ``DistributedHierarchy``; returns check counts per category.  Raises
+    :class:`VerifyError` on the first violated invariant."""
+    counts: Dict[str, int] = {"levels": len(h.levels)}
+    for lv in h.levels:
+        for name, op in (("A", lv.A), ("R", lv.R), ("P", lv.P)):
+            if op is None:
+                continue
+            try:
+                for k, v in verify_dist_op(
+                        op, value_bytes=h.value_bytes).items():
+                    counts[k] = counts.get(k, 0) + v
+            except VerifyError as e:
+                raise VerifyError(
+                    f"level {lv.index} operator {name}: {e}"
+                ) from e
+    return counts

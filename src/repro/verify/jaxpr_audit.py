@@ -1,0 +1,185 @@
+"""SPMD collective-uniformity audit of traced plan executors.
+
+MPI neighborhood collectives deadlock when ranks disagree on the call
+sequence.  The SPMD analogue: every device runs the *same* jaxpr, so the
+collective sequence is uniform by construction — *unless* a collective's
+execution or ordering becomes data-dependent (under ``lax.cond`` /
+``lax.while_loop``), or the traced program simply disagrees with the plan
+it claims to implement (wrong round count, wrong perm, wrong axis).
+
+This module traces a bound executor with ``jax.make_jaxpr`` (tracing is
+static — no devices run) and walks the jaxpr recursively, collecting every
+collective primitive with its axis name, permutation, operand shape/dtype,
+and whether it sits under data-dependent control flow.
+:func:`audit_executor` then requires the collected sequence to match the
+frozen :class:`~repro.core.collectives.DevicePlan` round for round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .invariants import VerifyError, _fail
+
+#: primitives that communicate across an axis
+COLLECTIVE_PRIMITIVES = frozenset({
+    "ppermute",
+    "pshuffle",
+    "all_to_all",
+    "all_gather",
+    "all_gather_invariant",
+    "psum",
+    "psum2",
+    "pmin",
+    "pmax",
+    "reduce_scatter",
+    "psum_scatter",
+})
+
+#: primitives whose branch choice / trip count depends on traced values —
+#: a collective beneath one executes a data-dependent number of times,
+#: the SPMD analogue of an unmatched MPI call
+_DATA_DEPENDENT_CONTROL = frozenset({"cond", "while"})
+
+
+@dataclass
+class CollectiveRecord:
+    """One collective occurrence in a traced program."""
+
+    kind: str
+    axis_name: Any
+    perm: Optional[Tuple[Tuple[int, int], ...]]
+    shape: Tuple[int, ...]
+    dtype: Any
+    in_control_flow: bool
+    control_path: Tuple[str, ...] = field(default_factory=tuple)
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    """Yield every jaxpr nested in an eqn's params (cond branches, the
+    shard_map body, custom-call callees, ...)."""
+    try:
+        import jax.extend.core as jex_core
+    except ImportError:  # pragma: no cover - older jax 0.4.x
+        import jax.core as jex_core
+
+    def is_jaxpr(v):
+        return isinstance(v, (jex_core.Jaxpr, jex_core.ClosedJaxpr))
+
+    for v in params.values():
+        if is_jaxpr(v):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                if is_jaxpr(item):
+                    yield item
+
+
+def _walk(jaxpr, out: List[CollectiveRecord],
+          control_path: Tuple[str, ...]) -> None:
+    inner = getattr(jaxpr, "jaxpr", jaxpr)   # unwrap ClosedJaxpr
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMITIVES:
+            axis = eqn.params.get("axis_name",
+                                  eqn.params.get("axes"))
+            perm = eqn.params.get("perm")
+            aval = eqn.invars[0].aval if eqn.invars else None
+            out.append(CollectiveRecord(
+                kind=name,
+                axis_name=axis,
+                perm=tuple(tuple(p) for p in perm)
+                if perm is not None else None,
+                shape=tuple(getattr(aval, "shape", ())),
+                dtype=getattr(aval, "dtype", None),
+                in_control_flow=bool(control_path),
+                control_path=control_path,
+            ))
+        child_path = (control_path + (name,)
+                      if name in _DATA_DEPENDENT_CONTROL else control_path)
+        for sub in _sub_jaxprs(eqn.params):
+            _walk(sub, out, child_path)
+
+
+def collective_signature(jaxpr) -> List[CollectiveRecord]:
+    """All collective occurrences of a (Closed)Jaxpr, in program order,
+    recursing through shard_map / pjit / control-flow bodies."""
+    out: List[CollectiveRecord] = []
+    _walk(jaxpr, out, ())
+    return out
+
+
+def trace_collectives(fn, *avals) -> List[CollectiveRecord]:
+    """Trace ``fn`` on abstract inputs and collect its collectives."""
+    import jax
+
+    return collective_signature(jax.make_jaxpr(fn)(*avals))
+
+
+def audit_executor(fn, dplan, axis_name: str,
+                   dtype=np.float32, width: int = 1) -> List[CollectiveRecord]:
+    """Prove a bound executor implements exactly its DevicePlan.
+
+    Traces ``fn`` on a ``[P, n_local_pad, width]`` abstract input and
+    checks, against the frozen plan, that the program contains exactly one
+    ``ppermute`` per wire round, in step-then-round order, each with the
+    plan's permutation, the bound axis name, and the plan's padded message
+    width — and that no collective executes under data-dependent control
+    flow and no off-plan collective kind appears.  Returns the collected
+    records for reporting.
+    """
+    import jax
+
+    aval = jax.ShapeDtypeStruct(
+        (dplan.n_procs, max(dplan.n_local_pad, 1), width), dtype
+    )
+    records = trace_collectives(fn, aval)
+
+    for rec in records:
+        if rec.in_control_flow:
+            _fail("collective under data-dependent control flow (devices "
+                  "could disagree on whether it executes)", kind=rec.kind,
+                  path="/".join(rec.control_path))
+        if rec.kind != "ppermute":
+            _fail("off-plan collective kind in an exchange executor",
+                  kind=rec.kind)
+
+    want = [(st.name, r, rnd) for st in dplan.steps
+            for r, rnd in enumerate(st.rounds)]
+    if len(records) != len(want):
+        _fail("traced ppermute count disagrees with the plan's wire "
+              "rounds", traced=len(records), plan_rounds=len(want))
+    for rec, (step, r, rnd) in zip(records, want):
+        if rec.perm is None or set(rec.perm) != set(
+                (int(s), int(d)) for s, d in rnd.perm):
+            _fail("traced permutation disagrees with the plan round",
+                  step=step, round=r, traced=rec.perm,
+                  plan=tuple(rnd.perm))
+        axes = rec.axis_name
+        if isinstance(axes, (tuple, list)):
+            ok = axis_name in axes
+        else:
+            ok = axes == axis_name
+        if not ok:
+            _fail("collective bound to the wrong mesh axis", step=step,
+                  round=r, traced=axes, expected=axis_name)
+        if rec.shape and rec.shape[0] != rnd.width:
+            _fail("traced message width disagrees with the plan round",
+                  step=step, round=r, traced=rec.shape[0],
+                  plan=rnd.width)
+        if rec.dtype is not None and np.dtype(rec.dtype) != np.dtype(dtype):
+            _fail("collective payload dtype disagrees with the input",
+                  step=step, round=r, traced=rec.dtype, expected=dtype)
+    return records
+
+
+__all__ = [
+    "VerifyError",
+    "COLLECTIVE_PRIMITIVES",
+    "CollectiveRecord",
+    "collective_signature",
+    "trace_collectives",
+    "audit_executor",
+]

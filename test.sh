@@ -13,5 +13,8 @@ cd "$(dirname "$0")"
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# Verify-on-insertion: every plan entering the PlanCache is statically
+# checked (repro.verify) in tests/CI; production hot paths leave it unset.
+export REPRO_VERIFY="${REPRO_VERIFY:-1}"
 
 exec /usr/bin/env python3 -m pytest -x -q "$@"

@@ -19,6 +19,11 @@ Invariants under test:
       buckets carried on top — via both the partial and the bucket-skipping
       kernel) equals the one-shot blocked kernel and the host matvec on ANY
       random sparsity/ghost pattern.
+  P10 The static verifier (repro.verify) accepts every plan/partition/
+      layout built from random patterns, and rejects every injected
+      corruption — size-mismatched send, dropped ghost column, duplicated
+      bucket, round-coloring conflict — with a diagnostic naming the
+      offending rank/bucket.
 """
 import numpy as np
 import pytest
@@ -300,6 +305,168 @@ def test_p9_overlap_split_matches_blocked_and_host(sp):
         np.testing.assert_allclose(
             np.asarray(y)[:n_rows], want, rtol=1e-4, atol=1e-4
         )
+
+
+# ---------------------------------------------------------------------------
+# P10: the verifier accepts everything the planners build, and rejects
+# every injected corruption with a rank/bucket diagnostic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(patterns(), st.sampled_from(["standard", "partial", "full"]))
+def test_p10_verifier_accepts_built_plans(pt, strategy):
+    from repro.core.collectives import build_device_plan
+    from repro.verify import verify_device_plan, verify_pattern, verify_plan
+
+    pattern, topo, _ = pt
+    verify_pattern(pattern)
+    plan = build_plan(pattern, topo, strategy)
+    verify_plan(plan)
+    verify_device_plan(build_device_plan(plan), pattern)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_partitions())
+def test_p10_verifier_accepts_built_partitions(sp):
+    from repro.sparse import (
+        partition_csr,
+        partitioned_to_ell,
+        partitioned_to_ell_blocked,
+    )
+    from repro.sparse.device import select_spmv_kernel
+    from repro.verify import (
+        verify_bucket_map,
+        verify_device_ell,
+        verify_ell_blocked,
+        verify_kernel_budget,
+        verify_partition,
+    )
+
+    A, n_procs, bc, _ = sp
+    part = partition_csr(A, n_procs)
+    verify_partition(part)
+    ell = partitioned_to_ell(part)
+    verify_device_ell(ell, part)
+    verify_kernel_budget(ell, select_spmv_kernel(part))
+    bell = partitioned_to_ell_blocked(part, block_cols=bc)
+    verify_ell_blocked(bell, part)
+    verify_kernel_budget(bell, select_spmv_kernel(part, block_cols=bc))
+    verify_bucket_map(bell, block_rows=8)
+    Cl = bell.n_local_buckets
+    verify_bucket_map(bell, block_rows=8, bucket_hi=Cl)
+    if bell.n_ghost_buckets:
+        verify_bucket_map(bell, block_rows=8, bucket_lo=Cl)
+
+
+@settings(max_examples=25, deadline=None)
+@given(patterns(), st.sampled_from(["standard", "partial", "full"]))
+def test_p10_rejects_size_mismatched_send(pt, strategy):
+    """Truncating one wire message's payload (sizes still equal, so the
+    Message invariant holds) must surface as a conservation failure naming
+    the starved rank — the undelivered ghost slot."""
+    from hypothesis import assume
+
+    from repro.verify import VerifyError, verify_plan
+
+    pattern, topo, _ = pt
+    plan = build_plan(pattern, topo, strategy)
+    wire = [m for st_ in plan.steps for m in st_.messages
+            if m.src != m.dst and m.size > 0]
+    assume(wire)
+    m = wire[len(wire) // 2]
+    m.src_idx = m.src_idx[:-1]
+    m.dst_idx = m.dst_idx[:-1]
+    with pytest.raises(VerifyError) as ei:
+        verify_plan(plan)
+    msg = str(ei.value)
+    assert "rank=" in msg or "dst=" in msg, msg
+
+
+@settings(max_examples=25, deadline=None)
+@given(sparse_partitions())
+def test_p10_rejects_dropped_ghost_column(sp):
+    """Deleting the last exchange slot of a rank with ghosts must be
+    rejected with a diagnostic naming that rank."""
+    from hypothesis import assume
+
+    from repro.sparse import partition_csr
+    from repro.verify import VerifyError, verify_partition
+
+    A, n_procs, _, _ = sp
+    part = partition_csr(A, n_procs)
+    victims = [p for p in range(n_procs) if len(part.needs[p])]
+    assume(victims)
+    p = victims[0]
+    part.needs[p] = part.needs[p][:-1]
+    with pytest.raises(VerifyError) as ei:
+        verify_partition(part)
+    assert f"rank={p}" in str(ei.value)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_partitions())
+def test_p10_rejects_duplicated_bucket(sp):
+    """Listing a live bucket twice in a row-block window (its values would
+    be accumulated twice by the skip kernel) must be rejected naming the
+    bucket."""
+    from hypothesis import assume
+
+    from repro.sparse import partition_csr, partitioned_to_ell_blocked
+    from repro.sparse.device import row_block_bucket_map
+    from repro.verify import VerifyError, check_bucket_map
+
+    A, n_procs, bc, _ = sp
+    assume(A.nnz > 0)
+    part = partition_csr(A, n_procs)
+    bell = partitioned_to_ell_blocked(part, block_cols=bc)
+    lists, counts = row_block_bucket_map(bell, block_rows=8)
+    # widen the list capacity by one padding column, then duplicate the
+    # last live entry of the first non-empty row block
+    lists = np.concatenate(
+        [lists, np.zeros_like(lists[:, :, :1])], axis=2
+    )
+    p, rb = np.argwhere(counts > 0)[0]
+    n = int(counts[p, rb])
+    bucket = int(lists[p, rb, n - 1])
+    lists[p, rb, n] = bucket
+    counts = counts.copy()
+    counts[p, rb] = n + 1
+    with pytest.raises(VerifyError) as ei:
+        check_bucket_map(bell, lists, counts, block_rows=8)
+    msg = str(ei.value)
+    assert f"bucket={bucket}" in msg and f"rank={p}" in msg, msg
+
+
+@settings(max_examples=25, deadline=None)
+@given(patterns(), st.sampled_from(["standard", "partial", "full"]))
+def test_p10_rejects_round_coloring_conflict(pt, strategy):
+    """Merging two wire rounds re-creates the conflict the edge coloring
+    exists to prevent (a rank doubly booked in one ppermute) — rejected
+    naming the rank."""
+    from hypothesis import assume
+
+    from repro.core.plan import Round
+    from repro.verify import VerifyError, verify_round_schedule
+
+    pattern, topo, _ = pt
+    plan = build_plan(pattern, topo, strategy)
+    rounds = None
+    for step in plan.steps:
+        rs = color_rounds(step.messages)
+        if len(rs) >= 2:
+            rounds = rs
+            break
+    assume(rounds is not None)
+    a, b = rounds[0], rounds[1]
+    merged = Round(
+        pairs=list(a.pairs) + list(b.pairs),
+        src_idx=list(a.src_idx) + list(b.src_idx),
+        dst_idx=list(a.dst_idx) + list(b.dst_idx),
+    )
+    with pytest.raises(VerifyError) as ei:
+        verify_round_schedule([merged])
+    assert "rank=" in str(ei.value)
 
 
 @settings(max_examples=40, deadline=None)

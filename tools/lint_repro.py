@@ -1,0 +1,205 @@
+"""Repo-specific AST lint — bug classes this codebase has actually hit.
+
+Three rules, each guarding an invariant the generic linters don't know
+about:
+
+* **R1 mutable-dataclass-default** — a dataclass field whose default is a
+  mutable display (``[]``, ``{}``, ``set()``) or a non-whitelisted call is
+  shared across every instance (the PR 7 ``StragglerConfig`` bug class:
+  one engine's straggler history mutated another's config).  Use
+  ``dataclasses.field(default_factory=...)``.
+* **R2 unsorted-hash-iteration** — inside any function that feeds a hash
+  (``hashlib.*`` / ``pattern_fingerprint``), iterating a dict/set view
+  without ``sorted(...)`` makes the digest depend on insertion/hash order
+  and silently breaks cross-process fingerprint determinism.
+* **R3 tracer-missing-pure-exchange** — every ``*.record_plan(...)`` call
+  must pass ``pure_exchange=`` explicitly: the default (True) feeds the
+  sample into the NNLS rate fit, so an unlabeled impure timing (exchange
+  fused with compute) silently skews every fitted machine rate.
+
+Run as ``python -m tools.lint_repro [roots...]`` (defaults to ``src``
+``benchmarks`` ``tools``); exits 1 if anything is flagged.  Findings
+print as ``path:line: RULE-ID message`` so CI logs are clickable.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+Finding = Tuple[Path, int, str, str]   # (file, line, rule, message)
+
+DEFAULT_ROOTS = ("src", "benchmarks", "tools")
+
+#: calls that are safe as dataclass defaults: dataclasses.field itself and
+#: constructors of immutable values
+_SAFE_DEFAULT_CALLS = frozenset({
+    "field", "dataclasses.field",
+    "float", "int", "str", "bool", "bytes", "complex",
+    "tuple", "frozenset",
+})
+
+#: modules allowed to call record_plan without the keyword (the definition
+#: module itself: its internal forwarding sets the semantics)
+_R3_EXEMPT = ("repro/profile/trace.py",)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('dataclasses.field')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _dotted(target).split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+def _mutable_default(value: ast.AST) -> str:
+    """Why a default expression is mutable-shared, or '' if it is fine."""
+    if isinstance(value, (ast.List, ast.Dict, ast.Set)):
+        return f"literal {type(value).__name__.lower()} display"
+    if isinstance(value, ast.Call):
+        name = _dotted(value.func)
+        if name in _SAFE_DEFAULT_CALLS or \
+                name.split(".")[-1] in ("field",):
+            return ""
+        return f"call to {name or '<expr>'}()"
+    return ""
+
+
+def _check_dataclass_defaults(tree: ast.Module, path: Path,
+                              out: List[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef) and
+                _is_dataclass_decorated(node)):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign) and
+                    stmt.value is not None):
+                continue
+            why = _mutable_default(stmt.value)
+            if why:
+                field_name = getattr(stmt.target, "id", "<field>")
+                out.append((
+                    path, stmt.lineno, "R1-mutable-dataclass-default",
+                    f"dataclass {node.name}.{field_name} default is a "
+                    f"{why}, shared across instances — use "
+                    "dataclasses.field(default_factory=...)",
+                ))
+
+
+def _feeds_hash(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name.startswith("hashlib.") or \
+                    name.split(".")[-1] in ("blake2b", "sha256", "md5",
+                                            "pattern_fingerprint"):
+                return True
+    return False
+
+
+def _iter_targets(fn: ast.AST) -> Iterator[ast.expr]:
+    """Expressions iterated by for-loops and comprehensions in ``fn``."""
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter
+
+
+def _check_hash_iteration(tree: ast.Module, path: Path,
+                          out: List[Finding]) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _feeds_hash(fn):
+            continue
+        for it in _iter_targets(fn):
+            # unwrapped dict/set views: x.items()/.keys()/.values(), set(x)
+            unordered = ""
+            if isinstance(it, ast.Call):
+                name = _dotted(it.func)
+                if name.endswith((".items", ".keys", ".values")):
+                    unordered = name.split(".")[-1] + "()"
+                elif name == "set":
+                    unordered = "set()"
+            elif isinstance(it, ast.Set):
+                unordered = "set display"
+            if unordered:
+                out.append((
+                    path, it.lineno, "R2-unsorted-hash-iteration",
+                    f"iterating {unordered} inside hash-feeding function "
+                    f"{fn.name}() — wrap in sorted(...) or the digest "
+                    "depends on insertion order",
+                ))
+
+
+def _check_record_plan(tree: ast.Module, path: Path,
+                       out: List[Finding]) -> None:
+    if str(path).replace("\\", "/").endswith(_R3_EXEMPT):
+        return
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr == "record_plan"):
+            continue
+        if not any(kw.arg == "pure_exchange" for kw in node.keywords):
+            out.append((
+                path, node.lineno, "R3-tracer-missing-pure-exchange",
+                "record_plan() without an explicit pure_exchange= — the "
+                "silent default (True) feeds this sample into the machine-"
+                "rate fit; state whether the timing is a pure exchange",
+            ))
+
+
+def lint_file(path: Path) -> List[Finding]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # pragma: no cover - repo code always parses
+        return [(path, e.lineno or 0, "R0-syntax-error", str(e))]
+    out: List[Finding] = []
+    _check_dataclass_defaults(tree, path, out)
+    _check_hash_iteration(tree, path, out)
+    _check_record_plan(tree, path, out)
+    return out
+
+
+def lint_paths(roots) -> List[Finding]:
+    findings: List[Finding] = []
+    for root in roots:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings.extend(lint_file(f))
+    return findings
+
+
+def main(argv=None) -> int:
+    roots = (argv if argv else sys.argv[1:]) or list(DEFAULT_ROOTS)
+    findings = lint_paths(roots)
+    for path, line, rule, msg in findings:
+        print(f"{path}:{line}: {rule} {msg}")
+    n_files = sum(1 for root in roots for _ in
+                  (Path(root).rglob("*.py") if Path(root).is_dir()
+                   else [Path(root)]))
+    if findings:
+        print(f"lint_repro: {len(findings)} finding(s) in {n_files} files")
+        return 1
+    print(f"lint_repro: clean ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
