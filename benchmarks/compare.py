@@ -13,7 +13,9 @@ Row policy, driven by the ``kind=`` tag each row carries:
   baseline within ``--modeled-rtol`` (non-numeric fields — strategy and
   kernel-variant choices — must match exactly).  A drift here means the
   model, a plan, or a selection changed: exactly the regression this gate
-  exists to catch.
+  exists to catch.  Deterministic ``obs/*`` rows (telemetry counter and
+  span counts) are gated **exactly** (rtol=0): the same program must
+  produce the same counts on every machine.
 * MEASURED rows (``measured-*``) are wall-clock on whatever machine CI
   gives us: they must exist and be finite, and nonzero timings must stay
   within a generous ``--measured-band`` factor of the baseline.  Measured
@@ -112,6 +114,11 @@ def compare_row(base: dict, new: dict, modeled_rtol: float,
         return regs
 
     if is_deterministic(kind):
+        # telemetry counter/span-count rows are integers by construction:
+        # the same program must produce the SAME count everywhere, so they
+        # get exact (rtol=0) matching instead of the modeled tolerance
+        if name.startswith("obs/"):
+            modeled_rtol = 0.0
         if not _rel_close(b_us, n_us, modeled_rtol):
             regs.append({
                 "name": name, "what": "modeled-us-drift",

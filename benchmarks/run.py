@@ -339,6 +339,116 @@ def verify_rows(rows: int):
     return out
 
 
+def obs_rows(rows: int, out_dir: pathlib.Path):
+    """Telemetry layer (``repro.obs``) smoke: deterministic plan-cache
+    counter rows, a deterministic span-count row, measured disabled-path
+    overhead, and a Perfetto trace artifact.
+
+    The ``obs/plan_cache/*`` and ``obs/spans/*`` rows are kind=exact-plan
+    and **exactly** gated by ``benchmarks.compare`` (rtol=0 for ``obs/*``):
+    the same program must produce the same hit/miss/span counts on every
+    machine.  The pattern set is built host-side against a fixed
+    ``Topology(8, 4)``, independent of the real device count."""
+    import numpy as np
+
+    from repro.core import CommPattern, PlanCache, Topology
+    from repro.obs import Obs, default_obs, now as _now
+
+    out = []
+    obs = default_obs()
+    was_enabled = obs.enabled
+    obs.reset().enable()
+    try:
+        topo = Topology(8, 4)
+        n_per = max(rows // topo.n_procs, 16)
+        rng = np.random.default_rng(0)
+        offsets = np.arange(topo.n_procs + 1) * n_per
+        patterns = []
+        for seed in range(4):
+            rng = np.random.default_rng(seed)
+            needs = [np.sort(rng.choice(topo.n_procs * n_per, size=12,
+                                        replace=False))
+                     for _ in range(topo.n_procs)]
+            patterns.append(CommPattern.from_block_partition(needs, offsets))
+
+        cache = PlanCache()
+        before = obs.snapshot()
+        for pat in patterns:                      # cold: every plan misses
+            for strat in ("standard", "full"):
+                cache.collective(pat, topo, strat)
+        cold = obs.delta(before)["counters"].get("plan_cache/misses", [])
+        cold_misses = sum(r["value"] for r in cold
+                          if r["labels"].get("ns") == "collective")
+        before = obs.snapshot()
+        for pat in patterns:                      # warm: every plan hits
+            for strat in ("standard", "full"):
+                cache.collective(pat, topo, strat)
+        d = obs.delta(before)["counters"]
+        warm_hits = sum(r["value"]
+                        for r in d.get("plan_cache/hits", [])
+                        if r["labels"].get("ns") == "collective")
+        warm_misses = sum(r["value"]
+                          for r in d.get("plan_cache/misses", [])
+                          if r["labels"].get("ns") == "collective")
+        out.append((
+            "obs/plan_cache/cold_misses", cold_misses,
+            f"kind=exact-plan|patterns={len(patterns)}|strategies=2",
+        ))
+        out.append((
+            "obs/plan_cache/warm_hits", warm_hits,
+            f"kind=exact-plan|warm_misses={warm_misses:.0f}",
+        ))
+
+        # span determinism: a fixed-iteration loop emits exactly that many
+        # spans (the solver's vcycle_iter span contract, mesh-free here)
+        iters = 5
+        for it in range(iters):
+            with obs.span("bench/obs_iter", iter=it):
+                pass
+        n_spans = sum(1 for e in obs.spans.events(kind="span")
+                      if e.name == "bench/obs_iter")
+        out.append((
+            "obs/spans/loop_iters", float(n_spans),
+            f"kind=exact-plan|iters={iters}",
+        ))
+
+        # disabled-path overhead: counter inc + span open on a DISABLED
+        # private Obs, reported as ns/op (measured, band-compared)
+        off = Obs()
+        c_off = off.counter("bench/off", "")
+        n = 200_000
+        t0 = _now()
+        for _ in range(n):
+            c_off.inc()
+        dt_counter = (_now() - t0) / n
+        t0 = _now()
+        for _ in range(n):
+            off.span("bench/off")
+        dt_span = (_now() - t0) / n
+        out.append((
+            "obs/overhead/counter_disabled", dt_counter * 1e6,
+            f"kind=measured-host|ns_per_op={dt_counter * 1e9:.1f}",
+        ))
+        out.append((
+            "obs/overhead/span_disabled", dt_span * 1e6,
+            f"kind=measured-host|ns_per_op={dt_span * 1e9:.1f}",
+        ))
+
+        # the Perfetto artifact CI uploads next to the results JSON
+        out_dir.mkdir(parents=True, exist_ok=True)
+        trace_path = out_dir / "obs_trace.json"
+        obs.export_perfetto(trace_path)
+        out.append((
+            "obs/export/trace_events",
+            float(len(obs.to_perfetto()["traceEvents"])),
+            f"kind=measured-host|path={trace_path.name}",
+        ))
+    finally:
+        if not was_enabled:
+            obs.disable()
+    return out
+
+
 def build_sections(rows: int, smoke: bool, tracer=None):
     """Section list; ``tracer`` (set by --calibrate) makes the measured
     sections record their timings so the calibration fit reuses them
@@ -442,12 +552,13 @@ def main(argv=None) -> int:
         from repro.profile import TraceRecorder
 
         tracer = TraceRecorder()   # shared: measured sections feed the fit
+    art_dir = (pathlib.Path(out_path).parent if out_path
+               else pathlib.Path(__file__).parent / "results")
     sections = build_sections(rows, args.smoke, tracer)
     if args.smoke or args.verify:
         sections.append(("verify", lambda: verify_rows(rows)))
+    sections.append(("obs", lambda: obs_rows(rows, art_dir)))
     if args.calibrate:
-        art_dir = (pathlib.Path(out_path).parent if out_path
-                   else pathlib.Path(__file__).parent / "results")
         sections.append(
             ("calibrate",
              lambda: calibration_rows(rows, art_dir, args.smoke, tracer))

@@ -14,6 +14,11 @@ devices test.sh configures:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python examples/serve_decode.py --adaptive
+
+Observability demo (``--observe``): the same skewed decode with the
+``repro.obs`` telemetry layer enabled — decode-step spans, the replan as
+a trace instant, periodic online ``MachineParams`` refits from
+production-step exchange probes, and a Perfetto trace export.
 """
 import sys
 
@@ -80,10 +85,80 @@ def adaptive_demo():
           f"evictions={s['evictions']}")
 
 
+def observe_demo():
+    """Observability + online-recalibration demo (``observe=True``).
+
+    Runs the adaptive skewed-traffic decode with the telemetry layer on:
+    every decode step becomes a span, the drift re-selection lands as a
+    ``serve/replan`` instant in the trace, and every ``refit_every``
+    steps the engine probes the live dispatch exchange and re-fits
+    ``MachineParams`` from the accumulated pure samples.  Exports
+    ``serve_trace.json`` — open it at https://ui.perfetto.dev — and
+    prints the obs rollup table.
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+          python examples/serve_decode.py --observe
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import reduced
+    from repro.models import Model
+    from repro.obs import default_obs
+    from repro.serve import Request, ServeEngine
+
+    cfg0 = reduced("mixtral-8x7b")
+    cfg = cfg0.__class__(**{**cfg0.__dict__, "dtype": jnp.float32})
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    model = Model(cfg, mesh=mesh, moe_mode="auto", remat=False,
+                  moe_cap_factor=8.0)
+    params = model.init_params(seed=0)
+    eng = ServeEngine(model, params, batch_slots=2, max_len=96,
+                      adaptive=True, drift_threshold=0.3, drift_warmup=2,
+                      observe=True, refit_every=8)
+    rng = np.random.default_rng(1)
+    eng.submit(Request(
+        rid=0,
+        prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+        max_new_tokens=60,
+    ))
+    for _ in range(13):
+        eng.step()
+    # skew the routing mid-run (see adaptive_demo): drift -> one replan
+    params["blocks"]["moe"]["router"] = jnp.zeros_like(
+        params["blocks"]["moe"]["router"]
+    )
+    for _ in range(20):
+        eng.step()
+        if eng.replan_events:
+            break
+    for _ in range(8):
+        eng.step()
+
+    obs = default_obs()
+    print(obs.report())
+    print()
+    for ev in eng.replan_events:
+        print(f"replan:  {ev}")
+    for ev in eng.refit_events:
+        print(f"refit:   {ev}")
+    if eng.machine_params is not None:
+        print(f"fitted MachineParams '{eng.machine_params.name}' now "
+              f"drive the adaptive planner's transport selection")
+    obs.export_perfetto("serve_trace.json")
+    print("\nPerfetto trace written to serve_trace.json "
+          "(open at https://ui.perfetto.dev)")
+
+
 def main():
     argv = sys.argv[1:]
     if "--adaptive" in argv:
         adaptive_demo()
+        return
+    if "--observe" in argv:
+        observe_demo()
         return
     if "--arch" not in argv:
         argv = ["--arch", "gemma3-1b"] + argv

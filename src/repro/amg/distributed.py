@@ -44,6 +44,7 @@ from ..core.costmodel import MachineParams, TPU_V5E, plan_time
 from ..core.neighborhood import NeighborAlltoallV
 from ..core.plan import Topology
 from ..core.selection import SelectionReport
+from ..obs import default_obs, now as _now
 from ..sparse.device import (
     DEFAULT_BLOCK_COLS,
     DeviceEll,
@@ -69,6 +70,8 @@ from .distributed_setup import (
     distributed_build_hierarchy,
 )
 from .hierarchy import Hierarchy, inv_diag
+
+_OBS = default_obs()
 
 
 @dataclass
@@ -242,27 +245,34 @@ class DistributedHierarchy:
                 for lvl in h.levels
             ]
         levels: List[DistributedLevel] = []
-        for k, lvl in enumerate(h.levels):
-            A_op = make_op(lvl.A, offs[k], offs[k])
-            pad = int(np.diff(offs[k]).max())
-            dinv = inv_diag(lvl.A)
-            dl = DistributedLevel(
-                index=k,
-                n=lvl.A.nrows,
-                pad=pad,
-                A=A_op,
-                dinv=pack_vector(offs[k], pad, dinv.astype(dtype)),
-                rho=lvl.rho or 1.0,
-            )
-            if lvl.P is not None and k + 1 < len(h.levels):
-                dl.R = make_op(lvl.R, offs[k + 1], offs[k])
-                dl.P = make_op(lvl.P, offs[k], offs[k + 1])
-            levels.append(dl)
-        dh = cls(levels, mesh, axis_name, topo, cache, dtype,
-                 strategy, params, value_bytes,
-                 spmv_variant=spmv_variant,
-                 spmv_vmem_limit=spmv_vmem_limit,
-                 spmv_overlap=spmv_overlap)
+        with _OBS.span("amg/setup", n_procs=n_procs, strategy=strategy,
+                       levels=len(h.levels)):
+            for k, lvl in enumerate(h.levels):
+                with _OBS.span("amg/build_level", level=k,
+                               n=lvl.A.nrows) as lsp:
+                    A_op = make_op(lvl.A, offs[k], offs[k])
+                    pad = int(np.diff(offs[k]).max())
+                    dinv = inv_diag(lvl.A)
+                    dl = DistributedLevel(
+                        index=k,
+                        n=lvl.A.nrows,
+                        pad=pad,
+                        A=A_op,
+                        dinv=pack_vector(offs[k], pad, dinv.astype(dtype)),
+                        rho=lvl.rho or 1.0,
+                    )
+                    if lvl.P is not None and k + 1 < len(h.levels):
+                        dl.R = make_op(lvl.R, offs[k + 1], offs[k])
+                        dl.P = make_op(lvl.P, offs[k], offs[k + 1])
+                    levels.append(dl)
+                    lsp.set(strategy=A_op.strategy,
+                            kernel=A_op.kernel_variant,
+                            overlap=A_op.overlap_mode)
+            dh = cls(levels, mesh, axis_name, topo, cache, dtype,
+                     strategy, params, value_bytes,
+                     spmv_variant=spmv_variant,
+                     spmv_vmem_limit=spmv_vmem_limit,
+                     spmv_overlap=spmv_overlap)
         dh._host = h
         return dh
 
@@ -329,27 +339,37 @@ class DistributedHierarchy:
             return DistOp(part, coll, ell, sel, osel)
 
         levels: List[DistributedLevel] = []
-        for k, sl in enumerate(setup.levels):
-            A_op = make_op(sl.A_blocks, sl.row_offsets, sl.row_offsets)
-            pad = int(np.diff(sl.row_offsets).max())
-            dinv = np.zeros((n_procs, pad), dtype=dtype)
-            for p, Ab in enumerate(sl.A_blocks):
-                dinv[p, : Ab.nrows] = _block_inv_diag(
-                    Ab, int(sl.row_offsets[p])
-                ).astype(dtype)
-            dl = DistributedLevel(
-                index=k, n=sl.nrows, pad=pad, A=A_op,
-                dinv=dinv, rho=sl.rho or 1.0,
-            )
-            if sl.P_blocks is not None and k + 1 < len(setup.levels):
-                dl.R = make_op(sl.R_blocks, sl.coarse_offsets, sl.row_offsets)
-                dl.P = make_op(sl.P_blocks, sl.row_offsets, sl.coarse_offsets)
-            levels.append(dl)
-        dh = cls(levels, mesh, axis_name, topo, cache, dtype,
-                 strategy, params, value_bytes,
-                 spmv_variant=spmv_variant,
-                 spmv_vmem_limit=spmv_vmem_limit,
-                 spmv_overlap=spmv_overlap)
+        with _OBS.span("amg/setup_partitioned", n_procs=n_procs,
+                       strategy=strategy, levels=len(setup.levels)):
+            for k, sl in enumerate(setup.levels):
+                with _OBS.span("amg/build_level", level=k,
+                               n=sl.nrows) as lsp:
+                    A_op = make_op(sl.A_blocks, sl.row_offsets,
+                                   sl.row_offsets)
+                    pad = int(np.diff(sl.row_offsets).max())
+                    dinv = np.zeros((n_procs, pad), dtype=dtype)
+                    for p, Ab in enumerate(sl.A_blocks):
+                        dinv[p, : Ab.nrows] = _block_inv_diag(
+                            Ab, int(sl.row_offsets[p])
+                        ).astype(dtype)
+                    dl = DistributedLevel(
+                        index=k, n=sl.nrows, pad=pad, A=A_op,
+                        dinv=dinv, rho=sl.rho or 1.0,
+                    )
+                    if sl.P_blocks is not None and k + 1 < len(setup.levels):
+                        dl.R = make_op(sl.R_blocks, sl.coarse_offsets,
+                                       sl.row_offsets)
+                        dl.P = make_op(sl.P_blocks, sl.row_offsets,
+                                       sl.coarse_offsets)
+                    levels.append(dl)
+                    lsp.set(strategy=A_op.strategy,
+                            kernel=A_op.kernel_variant,
+                            overlap=A_op.overlap_mode)
+            dh = cls(levels, mesh, axis_name, topo, cache, dtype,
+                     strategy, params, value_bytes,
+                     spmv_variant=spmv_variant,
+                     spmv_vmem_limit=spmv_vmem_limit,
+                     spmv_overlap=spmv_overlap)
         dh.setup_info = setup
         return dh
 
@@ -458,13 +478,19 @@ class DistributedHierarchy:
             )
         nb = max(float(np.linalg.norm(b)), 1e-300)
         hist: List[float] = []
-        for _ in range(max_iters):
-            x_new, rn = self._step(x, bg)
-            rel = float(rn) / nb
-            hist.append(rel)
-            if rel < tol:
-                break
-            x = x_new
+        with _OBS.span("amg/solve", n=lv0.n, tol=tol,
+                       max_iters=max_iters) as sp:
+            for it in range(max_iters):
+                # the float() is the device sync: the iteration span
+                # covers the whole V-cycle, not just its dispatch
+                with _OBS.span("amg/vcycle_iter", iter=it):
+                    x_new, rn = self._step(x, bg)
+                    rel = float(rn) / nb
+                hist.append(rel)
+                if rel < tol:
+                    break
+                x = x_new
+            sp.set(iters=len(hist), final_rel=hist[-1] if hist else 0.0)
         return unpack_vector(lv0.A.part.offsets, np.asarray(x)), hist
 
     # ------------------------------------------------------------ elastic
@@ -512,29 +538,30 @@ class DistributedHierarchy:
         carries a ``runtime.controller.ResizeEvent`` in ``last_resize``
         with the rebuild's wall time and the plan-cache miss/hit delta.
         """
-        import time as _time
-
         from ..runtime.controller import cache_delta_event
 
         mesh = mesh if mesh is not None else self.mesh
         axis_name = axis_name if axis_name is not None else self.axis_name
         h = self._global_hierarchy()
         before = self.cache.counters()
-        t0 = _time.perf_counter()
-        new = DistributedHierarchy.setup(
-            h, mesh, axis_name,
-            procs_per_region=procs_per_region,
-            strategy=self.strategy,
-            params=params if params is not None else self.params,
-            value_bytes=self.value_bytes,
-            cache=self.cache,
-            dtype=self.dtype,
-            spmv_variant=self.spmv_variant,
-            spmv_vmem_limit=self.spmv_vmem_limit,
-            spmv_overlap=self.spmv_overlap,
-            row_weights=row_weights,
-        )
-        secs = _time.perf_counter() - t0
+        t0 = _now()
+        with _OBS.span("amg/repartition", reason=reason,
+                       old_n=self.topo.n_procs) as sp:
+            new = DistributedHierarchy.setup(
+                h, mesh, axis_name,
+                procs_per_region=procs_per_region,
+                strategy=self.strategy,
+                params=params if params is not None else self.params,
+                value_bytes=self.value_bytes,
+                cache=self.cache,
+                dtype=self.dtype,
+                spmv_variant=self.spmv_variant,
+                spmv_vmem_limit=self.spmv_vmem_limit,
+                spmv_overlap=self.spmv_overlap,
+                row_weights=row_weights,
+            )
+            sp.set(new_n=new.topo.n_procs)
+        secs = _now() - t0
         new.last_resize = cache_delta_event(
             self.cache, before, reason,
             self.topo.n_procs, new.topo.n_procs, secs,
@@ -602,7 +629,11 @@ class DistributedHierarchy:
         ghost columns have no exchange and report 0.0.  When ``tracer`` (a
         ``repro.profile.TraceRecorder``) is given, each level's timing is
         recorded against its plan — the measured feed of the
-        measured-vs-modeled calibration loop.
+        measured-vs-modeled calibration loop.  With no explicit tracer,
+        any ``TraceRecorder`` attached to the enabled obs layer receives
+        the same samples through the span bridge (``pure_exchange``
+        span attributes) — how a production solve keeps feeding
+        calibration without threading a tracer through every call.
         """
         from ..core.collectives import time_executor
 
@@ -611,18 +642,25 @@ class DistributedHierarchy:
             if not lv.A.ell.ghost_pad:
                 out.append((lv.index, lv.A.strategy, 0.0))
                 continue
-            secs = time_executor(
-                self._bind_exchange_only(lv.A),
-                self.topo.n_procs,
-                lv.A.ell.in_pad,
-                dtype=self.dtype,
-                iters=iters,
-                warmup=warmup,
-            )
-            if tracer is not None:
-                tracer.record_plan(lv.A.coll.plan, secs,
-                                   label=f"amg/L{lv.index}",
-                                   pure_exchange=True)
+            with _OBS.span("amg/measure_exchange", level=lv.index,
+                           strategy=lv.A.strategy) as sp:
+                secs = time_executor(
+                    self._bind_exchange_only(lv.A),
+                    self.topo.n_procs,
+                    lv.A.ell.in_pad,
+                    dtype=self.dtype,
+                    iters=iters,
+                    warmup=warmup,
+                )
+                if tracer is not None:
+                    tracer.record_plan(lv.A.coll.plan, secs,
+                                       label=f"amg/L{lv.index}",
+                                       pure_exchange=True)
+                else:
+                    # no explicit tracer: let the obs bridge record it
+                    # (guarded so a tracer passed here is never doubled)
+                    sp.set(plan=lv.A.coll.plan, pure_exchange=True,
+                           seconds=secs)
             out.append((lv.index, lv.A.strategy, secs))
         return out
 
@@ -639,8 +677,6 @@ class DistributedHierarchy:
         ``merged_rate_samples(pure_only=True)`` must keep them out of the
         exchange-rate calibration fit.
         """
-        import time
-
         import jax
         import jax.numpy as jnp
 
@@ -655,11 +691,11 @@ class DistributedHierarchy:
             )
             for _ in range(warmup + 1):
                 fn(x).block_until_ready()
-            t0 = time.perf_counter()
+            t0 = _now()
             for _ in range(iters):
                 y = fn(x)
             y.block_until_ready()
-            secs = (time.perf_counter() - t0) / iters
+            secs = (_now() - t0) / iters
             if tracer is not None and lv.A.ell.ghost_pad:
                 tracer.record_plan(
                     lv.A.coll.plan, secs,

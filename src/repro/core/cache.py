@@ -31,15 +31,24 @@ Entry points:
 from __future__ import annotations
 
 import hashlib
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from ..obs import default_obs, now as _now
 from .costmodel import MachineParams, TPU_V5E
 from .neighborhood import NeighborAlltoallV
 from .plan import CommPattern, Topology
+
+_OBS = default_obs()
+_M_HITS = _OBS.counter("plan_cache/hits", "plan-cache hits by namespace")
+_M_MISSES = _OBS.counter("plan_cache/misses",
+                         "plan-cache misses by namespace")
+_M_EVICTIONS = _OBS.counter("plan_cache/evictions",
+                            "LRU evictions by namespace")
+_H_VERIFY = _OBS.histogram("plan_cache/verify_seconds",
+                           "verify-on-insertion wall time by namespace")
 
 
 def _hash_array(h, name: str, arr: np.ndarray) -> None:
@@ -114,12 +123,24 @@ class PlanCache:
     without bound.  Evictions are counted (:attr:`evictions`) and
     :meth:`stats` breaks hits/misses/entries out per namespace, which is
     what ``repro.profile`` reads when reporting amortization.
+
+    **Stats schema.**  The per-namespace ``_ns_counts`` dicts (filled by
+    :meth:`_lookup`, the single increment point) are the only source of
+    truth; :meth:`snapshot` is the one documented schema::
+
+        {"counters":   {hits, misses, exec_hits, exec_misses, evictions},
+         "namespaces": {ns: {hits, misses, entries}},   # 4 namespaces
+         "entries": int, "max_entries": int,
+         "init_seconds_spent": float, "init_seconds_saved": float}
+
+    where the flat ``counters`` aggregate plan namespaces (``collective``
+    + ``moe_plan`` → hits/misses) and executor namespaces (``executor``
+    + ``moe_executor`` → exec_hits/exec_misses).  :attr:`hits` &c are
+    read-only properties over that aggregation, and :meth:`counters` /
+    :meth:`stats` are backward-compatible aliases — both ``repro.obs``
+    and ``runtime.controller.cache_delta_event`` read this one schema.
     """
 
-    hits: int = 0
-    misses: int = 0
-    exec_hits: int = 0
-    exec_misses: int = 0
     evictions: int = 0
     max_entries: int = 512          # per namespace; <= 0 disables the bound
     init_seconds_spent: float = 0.0
@@ -132,18 +153,47 @@ class PlanCache:
     _moe_execs: Dict[Tuple, Callable] = field(default_factory=dict)
     _ns_counts: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
+    PLAN_NAMESPACES = ("collective", "moe_plan")
+    EXEC_NAMESPACES = ("executor", "moe_executor")
+
+    # ------------------------------------------------- derived counters
+    def _ns_sum(self, namespaces: Tuple[str, ...], which: str) -> int:
+        return sum(self._ns(ns)[which] for ns in namespaces)
+
+    @property
+    def hits(self) -> int:
+        return self._ns_sum(self.PLAN_NAMESPACES, "hits")
+
+    @property
+    def misses(self) -> int:
+        return self._ns_sum(self.PLAN_NAMESPACES, "misses")
+
+    @property
+    def exec_hits(self) -> int:
+        return self._ns_sum(self.EXEC_NAMESPACES, "hits")
+
+    @property
+    def exec_misses(self) -> int:
+        return self._ns_sum(self.EXEC_NAMESPACES, "misses")
+
     # ---------------------------------------------------- LRU bookkeeping
     def _ns(self, name: str) -> Dict[str, int]:
         return self._ns_counts.setdefault(name, {"hits": 0, "misses": 0})
 
     def _lookup(self, store: Dict, key, ns: str):
-        """LRU-aware get: a hit moves the entry to the recent end."""
+        """LRU-aware get: a hit moves the entry to the recent end.
+
+        The single hit/miss increment point — the flat properties and
+        the obs ``plan_cache/*`` counters both hang off it.
+        """
         entry = store.get(key)
         if entry is not None:
             store[key] = store.pop(key)    # dicts iterate in insert order
             self._ns(ns)["hits"] += 1
+            _M_HITS.inc(ns=ns)
         else:
             self._ns(ns)["misses"] += 1
+            _M_MISSES.inc(ns=ns)
         return entry
 
     def _insert(self, store: Dict, key, value, ns: str) -> None:
@@ -155,10 +205,13 @@ class PlanCache:
         from ..verify import verify_cache_value, verify_enabled
 
         if verify_enabled():
+            t0 = _now()
             verify_cache_value(ns, value)
+            _H_VERIFY.observe(_now() - t0, ns=ns)
         if self.max_entries > 0 and len(store) >= self.max_entries:
             store.pop(next(iter(store)))   # least-recently used
             self.evictions += 1
+            _M_EVICTIONS.inc(ns=ns)
         store[key] = value
 
     def collective(
@@ -173,10 +226,8 @@ class PlanCache:
         key = plan_cache_key(pattern, topo, strategy, value_bytes, params)
         coll = self._lookup(self._colls, key, "collective")
         if coll is not None:
-            self.hits += 1
             self.init_seconds_saved += coll.init_seconds
             return coll
-        self.misses += 1
         coll = NeighborAlltoallV.init(
             pattern, topo, strategy, value_bytes=value_bytes, params=params
         )
@@ -204,9 +255,7 @@ class PlanCache:
         key = (ckey, mesh, axis_name)
         fn = self._lookup(self._execs, key, "executor")
         if fn is not None:
-            self.exec_hits += 1
             return fn
-        self.exec_misses += 1
         fn = coll.bind(mesh, axis_name)
         # The jaxpr audit needs the collective's DevicePlan, which only
         # this frame still has next to the bound callable — so executors
@@ -214,7 +263,9 @@ class PlanCache:
         from ..verify import audit_executor, verify_enabled
 
         if verify_enabled():
+            t0 = _now()
             audit_executor(fn, coll.device_plan, axis_name)
+            _H_VERIFY.observe(_now() - t0, ns="executor_audit")
         self._insert(self._execs, key, fn, "executor")
         return fn
 
@@ -229,13 +280,11 @@ class PlanCache:
         """
         entry = self._lookup(self._moe_plans, key, "moe_plan")
         if entry is not None:
-            self.hits += 1
             self.init_seconds_saved += entry[1]
             return entry[0]
-        self.misses += 1
-        t0 = time.perf_counter()
+        t0 = _now()
         value = build()
-        secs = time.perf_counter() - t0
+        secs = _now() - t0
         self.init_seconds_spent += secs
         self._insert(self._moe_plans, key, (value, secs), "moe_plan")
         return value
@@ -245,29 +294,16 @@ class PlanCache:
         executor hit/miss, mirroring :meth:`executor`)."""
         fn = self._lookup(self._moe_execs, key, "moe_executor")
         if fn is not None:
-            self.exec_hits += 1
             return fn
-        self.exec_misses += 1
         fn = build()
         self._insert(self._moe_execs, key, fn, "moe_executor")
         return fn
 
-    def counters(self) -> Dict[str, int]:
-        """Snapshot of the flat hit/miss counters.  Take one before a
-        rebuild and diff afterwards to attribute plan/executor work to that
-        rebuild — ``runtime.controller.cache_delta_event`` turns the pair
-        into a ``ResizeEvent`` (how the elastic path proves a grow-back to
-        a seen geometry re-planned nothing)."""
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "exec_hits": self.exec_hits,
-            "exec_misses": self.exec_misses,
-        }
-
-    def stats(self) -> Dict[str, Any]:
-        """Flat legacy counters plus per-namespace hit/miss/entry counts
-        (the surface ``repro.profile`` and the benchmarks report)."""
+    def snapshot(self) -> Dict[str, Any]:
+        """The one documented stats schema (see class docstring): flat
+        aggregates under ``"counters"``, per-namespace breakdowns under
+        ``"namespaces"``.  Both :meth:`counters` and :meth:`stats` are
+        views of this."""
         sizes = {
             "collective": len(self._colls),
             "executor": len(self._execs),
@@ -275,20 +311,39 @@ class PlanCache:
             "moe_executor": len(self._moe_execs),
         }
         return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "exec_hits": self.exec_hits,
-            "exec_misses": self.exec_misses,
-            "evictions": self.evictions,
-            "entries": sum(sizes.values()),
-            "max_entries": self.max_entries,
-            "init_seconds_spent": self.init_seconds_spent,
-            "init_seconds_saved": self.init_seconds_saved,
+            "counters": {
+                "hits": self.hits,
+                "misses": self.misses,
+                "exec_hits": self.exec_hits,
+                "exec_misses": self.exec_misses,
+                "evictions": self.evictions,
+            },
             "namespaces": {
                 ns: {**self._ns(ns), "entries": sizes[ns]}
                 for ns in sizes
             },
+            "entries": sum(sizes.values()),
+            "max_entries": self.max_entries,
+            "init_seconds_spent": self.init_seconds_spent,
+            "init_seconds_saved": self.init_seconds_saved,
         }
+
+    def counters(self) -> Dict[str, int]:
+        """Alias: the flat ``snapshot()["counters"]`` hit/miss aggregates.
+        Take one before a rebuild and diff afterwards to attribute
+        plan/executor work to that rebuild —
+        ``runtime.controller.cache_delta_event`` turns the pair into a
+        ``ResizeEvent`` (how the elastic path proves a grow-back to a
+        seen geometry re-planned nothing)."""
+        return self.snapshot()["counters"]
+
+    def stats(self) -> Dict[str, Any]:
+        """Alias: the legacy flat layout (snapshot counters hoisted to the
+        top level) plus ``"namespaces"`` — the surface ``repro.profile``
+        and the benchmarks report."""
+        snap = self.snapshot()
+        return {**snap["counters"],
+                **{k: v for k, v in snap.items() if k != "counters"}}
 
     def clear(self) -> None:
         self._colls.clear()

@@ -215,9 +215,9 @@ def time_executor(
     two measured paths cannot drift.  ``dtype`` defaults to float64 to match
     the plans' ``value_bytes=8`` modeling assumption.
     """
-    import time
-
     import jax
+
+    from ..obs import now as _now
 
     fn = jax.jit(exchange)
     x = jnp.asarray(
@@ -235,10 +235,10 @@ def time_executor(
     fn(x).block_until_ready()  # compile
     for _ in range(warmup):
         fn(x).block_until_ready()
-    t0 = time.perf_counter()
+    t0 = _now()
     for _ in range(iters):
         fn(x).block_until_ready()
-    return (time.perf_counter() - t0) / iters
+    return (_now() - t0) / iters
 
 
 def pack_local_values(

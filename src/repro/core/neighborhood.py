@@ -11,12 +11,12 @@ balancing, dedup); calls are the cheap per-iteration start/wait.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import now as _now
 from .collectives import DevicePlan, build_device_plan, make_executor
 from .costmodel import MachineParams, TPU_V5E, plan_time
 from .locality import build_plan
@@ -40,7 +40,7 @@ class NeighborAlltoallV:
         value_bytes: int = 8,
         params: MachineParams = TPU_V5E,
     ) -> "NeighborAlltoallV":
-        t0 = time.perf_counter()
+        t0 = _now()
         report = None
         if strategy == "auto":
             plan, report = select_plan(
@@ -49,7 +49,7 @@ class NeighborAlltoallV:
         else:
             plan = build_plan(pattern, topo, strategy, value_bytes=value_bytes)
         dplan = build_device_plan(plan)
-        return cls(plan, dplan, time.perf_counter() - t0, report)
+        return cls(plan, dplan, _now() - t0, report)
 
     # host-side start/wait (oracle + small-scale use)
     def __call__(self, local_vals: Sequence[np.ndarray]) -> List[np.ndarray]:

@@ -10,10 +10,10 @@ plans, score them with the locality-aware max-rate model, pick the cheapest.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs import now as _now
 from .costmodel import MachineParams, TPU_V5E, plan_time
 from .locality import STRATEGIES, build_plan
 from .plan import CommPattern, CommPlan, Topology
@@ -51,9 +51,9 @@ def select_plan(
     times: Dict[str, float] = {}
     walls: Dict[str, float] = {}
     for strat in candidates:
-        t0 = time.perf_counter()
+        t0 = _now()
         plan = build_plan(pattern, topo, strat, value_bytes=value_bytes)
-        walls[strat] = time.perf_counter() - t0
+        walls[strat] = _now() - t0
         score = plan_time(plan, params)
         if amortization_iters:
             score += walls[strat] / amortization_iters

@@ -121,6 +121,62 @@ def moe_plan_for_model(model: Model, n_tokens: int, cache=None):
     )
 
 
+def moe_exchange_probe(
+    model: Model,
+    plan,
+    n_tokens: int,
+    cache=None,
+    iters: int = 5,
+    warmup: int = 1,
+):
+    """Time ``plan``'s dispatch pattern as a PURE exchange: (CommPlan,
+    seconds_per_exchange), or None when there is nothing to probe (dense
+    mode / non-MoE family).
+
+    The online-calibration feed of ``ServeEngine(observe=True)``: decode
+    dispatch wall time includes expert compute (recorded
+    ``pure_exchange=False``, excluded from rate fits), so the engine
+    periodically runs the *same routing pattern* as a bare neighborhood
+    exchange on the EP devices — those samples are fit-grade.  The
+    collective and its bound executor go through ``cache``, so repeated
+    probes re-plan and re-bind nothing.  Synthetic f32 payload with
+    ``d_model * itemsize`` bytes per value matches the plan's modeled
+    wire volume.
+    """
+    from ..obs import now as _now
+    from .moe import STRATEGY_OF_MODE, dispatch_pattern, dispatch_topology
+
+    if plan is None or plan.mode not in STRATEGY_OF_MODE:
+        return None
+    cache = cache if cache is not None else default_plan_cache()
+    pattern, _stats, _fp = dispatch_pattern(
+        plan, moe_tokens_per_lane(model, n_tokens)
+    )
+    topo = dispatch_topology(plan)
+    value_bytes = model.cfg.d_model * np.dtype(model.cfg.dtype).itemsize
+    strategy = STRATEGY_OF_MODE[plan.mode]
+    devs = np.asarray(model.mesh.devices).reshape(-1)[: topo.n_procs]
+    mesh = jax.sharding.Mesh(devs, ("probe",))
+    coll = cache.collective(pattern, topo, strategy, value_bytes)
+    fn = jax.jit(cache.executor(pattern, topo, mesh, "probe",
+                                strategy=strategy, value_bytes=value_bytes))
+    # f32 payload, one value = d columns -> value_bytes on the wire
+    d = max(1, value_bytes // 4)
+    n_pad = max(1, int(pattern.n_local.max()))
+    x = jnp.asarray(
+        np.random.default_rng(0)
+        .normal(size=(topo.n_procs, n_pad, d))
+        .astype(np.float32)
+    )
+    fn(x).block_until_ready()          # compile
+    for _ in range(warmup):
+        fn(x).block_until_ready()
+    t0 = _now()
+    for _ in range(iters):
+        fn(x).block_until_ready()
+    return coll.plan, (_now() - t0) / iters
+
+
 def _moe_ffn(model: Model, p_l, h, n_tokens, moe_plan=None, collect=False):
     """One MoE FFN sublayer.  ``moe_plan`` overrides the cached per-shape
     plan (the adaptive serving path pins a re-selected plan); with

@@ -24,6 +24,7 @@ Hook points (all optional, zero overhead when no tracer is passed):
 from __future__ import annotations
 
 import json
+import os
 import time
 from dataclasses import asdict, dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -258,10 +259,20 @@ class TraceRecorder:
         return tr
 
     def save(self, path) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=1)
+        """Atomic write (tmp + rename): a process killed mid-save can
+        never leave a truncated trace that later fails ``fit_trace``.
+        Accepts ``str`` or ``pathlib.Path``."""
+        path = os.fspath(path)
+        tmp = f"{path}.tmp-{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.to_json(), f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     @classmethod
     def load(cls, path) -> "TraceRecorder":
-        with open(path) as f:
+        with open(os.fspath(path)) as f:
             return cls.from_json(json.load(f))

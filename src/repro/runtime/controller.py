@@ -38,8 +38,11 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import default_obs
 from .elastic import HeartbeatMonitor, MeshRequirements, choose_mesh_shape
 from .straggler import StragglerConfig, StragglerDetector
+
+_OBS = default_obs()
 
 
 @dataclasses.dataclass
@@ -86,6 +89,22 @@ class RebalanceEvent:
                f"rel_rmse={self.rel_rmse:.3f}" if self.refit else "")
         return (f"rebalance@obs{self.step}: hosts={self.hosts} "
                 f"weights={np.round(self.weights, 4).tolist()}{fit}")
+
+
+@dataclasses.dataclass
+class RefitEvent:
+    """One online re-calibration: ``MachineParams`` re-fitted from
+    production-step pure-exchange samples (``ServeEngine(observe=True)``
+    periodic refits, next to the rebalance-triggered refits above)."""
+
+    step: int                  # decode step / observation that triggered it
+    params_name: str           # name of the fitted MachineParams
+    rel_rmse: float            # fit goodness
+    n_samples: int             # merged rate samples that entered the fit
+
+    def __str__(self) -> str:
+        return (f"refit@step{self.step}: params='{self.params_name}' "
+                f"rel_rmse={self.rel_rmse:.3f} n={self.n_samples}")
 
 
 class ElasticController:
@@ -187,6 +206,9 @@ class ElasticController:
             resize=new_dh.last_resize,
         )
         self.rebalance_events.append(event)
+        _OBS.event("runtime/rebalance", step=event.step,
+                   hosts=[int(h) for h in hosts], refit=event.refit,
+                   params_name=name)
         if new_dh.last_resize is not None:
             self.resize_events.append(new_dh.last_resize)
         # hysteresis: the rebalance changed the work distribution, so the
@@ -226,9 +248,11 @@ def cache_delta_event(
     old_n: int, new_n: int, seconds: float,
 ) -> ResizeEvent:
     """Build a :class:`ResizeEvent` from a plan-cache counter snapshot
-    (``PlanCache.counters()``) taken before the rebuild."""
+    (the flat ``PlanCache.counters()`` view of ``PlanCache.snapshot()``)
+    taken before the rebuild.  The one choke point every resize flows
+    through, so it also emits the ``runtime/resize`` obs instant event."""
     after = cache.counters()
-    return ResizeEvent(
+    event = ResizeEvent(
         reason=reason,
         old_n=int(old_n),
         new_n=int(new_n),
@@ -238,3 +262,7 @@ def cache_delta_event(
         exec_misses=after["exec_misses"] - before["exec_misses"],
         exec_hits=after["exec_hits"] - before["exec_hits"],
     )
+    _OBS.event("runtime/resize", reason=event.reason, old_n=event.old_n,
+               new_n=event.new_n, warm=event.warm,
+               plan_misses=event.plan_misses, plan_hits=event.plan_hits)
+    return event

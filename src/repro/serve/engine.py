@@ -25,6 +25,17 @@ the SAME plan cache (a grow-back to a seen geometry re-plans nothing),
 and resumes by re-prefilling the surviving sequences — exact, because
 admission re-prefill was already the engine's slot-recycling contract.
 Each resize is recorded as a ``runtime.controller.ResizeEvent``.
+
+Observability (``observe=True``): the engine enables the process-wide
+``repro.obs`` layer, wraps every decode step in a span, tracks per-request
+admit→finish latency histograms, and — every ``refit_every`` decode steps
+— runs :func:`repro.models.serving.moe_exchange_probe` (the decode
+dispatch pattern as a bare exchange), bridges the pure sample into its
+``TraceRecorder`` through the obs span bridge, and re-fits
+``MachineParams`` via ``profile.calibrate.fit_trace`` — the ROADMAP's
+online-calibration loop, recorded as ``runtime.controller.RefitEvent`` s.
+Spans never touch the numerics: obs-on decode output is bit-identical to
+obs-off (asserted by ``tests/multidevice_progs/check_obs.py``).
 """
 from __future__ import annotations
 
@@ -37,7 +48,14 @@ import numpy as np
 
 from ..core import default_plan_cache
 from ..models import Model, serving
+from ..obs import default_obs, now as _now
 from ..profile.adapt import AdaptivePlanner, ReplanEvent
+
+_OBS = default_obs()
+_H_REQUEST = _OBS.histogram("serve/request_seconds",
+                            "per-request admit->finish latency")
+_C_STEPS = _OBS.counter("serve/steps", "engine steps taken")
+_C_TOKENS = _OBS.counter("serve/tokens", "tokens decoded (all slots)")
 
 
 @dataclasses.dataclass
@@ -53,13 +71,32 @@ class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 256, adaptive: bool = False,
                  drift_threshold: float = 0.3, drift_warmup: int = 2,
-                 tracer=None, elastic: bool = False):
+                 tracer=None, elastic: bool = False,
+                 observe: bool = False, refit_every: int = 32):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.elastic = elastic
         self.resize_events: List[object] = []
+        # online calibration (observe=True): every `refit_every` decode
+        # steps, probe the dispatch exchange and refit MachineParams from
+        # the tracer's pure samples; fitted params land here and on the
+        # adaptive planner (so subsequent re-selections use measured rates)
+        self.observe = observe
+        self.refit_every = int(refit_every)
+        self.refit_events: List[object] = []
+        self.machine_params = None      # last fitted MachineParams
+        self._step_count = 0
+        self._admit_times: Dict[int, float] = {}
+        if observe:
+            if tracer is None:
+                from ..profile.trace import TraceRecorder
+
+                tracer = TraceRecorder()
+            # enables the PROCESS-WIDE obs layer and attaches the tracer
+            # as the span-bridge target (production steps feed fit_trace)
+            _OBS.enable(tracer=tracer)
         # device-count -> (mesh shape, axis names) this engine has served
         # on: a grow-back to a seen count reuses that exact geometry, so
         # every plan/executor for it is still in the cache (ISSUE-7's
@@ -208,7 +245,10 @@ class ServeEngine:
         if not free or not self.queue:
             return False
         while free and self.queue:
-            self.slots[free.pop(0)] = self.queue.pop(0)
+            req = self.queue.pop(0)
+            self.slots[free.pop(0)] = req
+            if _OBS.enabled:
+                self._admit_times[req.rid] = _now()
         self._prefill_slots()
         return True
 
@@ -231,9 +271,10 @@ class ServeEngine:
         toks = np.zeros((self.B, T), np.int32)
         for i, x in enumerate(seqs):
             toks[i, T - len(x):] = x  # right-align so last token is real
-        logits, caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}
-        )
+        with _OBS.span("serve/prefill", tokens=self.B * T, seq_len=T):
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}
+            )
         self.caches = caches
         self.cur_len = T
         self._next_tok = np.asarray(
@@ -257,8 +298,6 @@ class ServeEngine:
         ``runtime.controller.ResizeEvent``.
         """
         assert self.elastic, "construct ServeEngine(..., elastic=True)"
-        import time as _time
-
         from ..runtime.controller import cache_delta_event
         from ..runtime.elastic import (
             MeshRequirements,
@@ -273,66 +312,69 @@ class ServeEngine:
         # (prompt + generated); only the weights need to come off-mesh
         host_params = jax.device_get(self.params)
         before = self.plan_cache.counters()
-        t0 = _time.perf_counter()
-        if mesh is None:
-            seen = self._seen_geometries.get(int(n_devices))
-            if seen is not None:
-                # a geometry this engine already served on: reusing it
-                # keeps every cached plan/executor valid (grow-back warm)
-                shape, axes = seen
-            else:
-                old_tp = dict(zip(old.mesh.axis_names,
-                                  old.mesh.devices.shape)).get("model", 1)
-                # divisors of a working TP degree still divide the model
-                req = MeshRequirements(model_divisors=old_tp,
-                                       prefer_model=old_tp)
-                shape, axes = choose_mesh_shape(int(n_devices), req)
-            mesh = make_mesh_from_devices(shape, axes, devices)
-        self._seen_geometries[int(mesh.devices.size)] = (
-            tuple(mesh.devices.shape), tuple(mesh.axis_names)
-        )
-        new_model = Model(
-            old.cfg, mesh=mesh, moe_mode=old.moe_mode,
-            ep_over_pods=old.ep_over_pods, remat=old.remat, fsdp=old.fsdp,
-            moe_cap_factor=old.moe_cap_factor,
-            scan_layers=old.scan_layers, seq_shard=old.seq_shard,
-        )
-        if old.cfg.family == "moe" and new_model.e_phys != old.e_phys:
-            from ..models.moe import remap_expert_params
-
-            e_log = old.cfg.n_experts
-            host_params = dict(host_params)
-            blocks = dict(host_params["blocks"])
-            blocks["moe"] = remap_expert_params(
-                blocks["moe"], e_log,
-                old.e_phys // e_log, new_model.e_phys // e_log,
+        t0 = _now()
+        with _OBS.span("serve/resize", reason=reason,
+                       old_n=old_n) as sp:
+            if mesh is None:
+                seen = self._seen_geometries.get(int(n_devices))
+                if seen is not None:
+                    # a geometry this engine already served on: reusing it
+                    # keeps every cached plan/executor valid (grow-back warm)
+                    shape, axes = seen
+                else:
+                    old_tp = dict(zip(old.mesh.axis_names,
+                                      old.mesh.devices.shape)).get("model", 1)
+                    # divisors of a working TP degree still divide the model
+                    req = MeshRequirements(model_divisors=old_tp,
+                                           prefer_model=old_tp)
+                    shape, axes = choose_mesh_shape(int(n_devices), req)
+                mesh = make_mesh_from_devices(shape, axes, devices)
+            self._seen_geometries[int(mesh.devices.size)] = (
+                tuple(mesh.devices.shape), tuple(mesh.axis_names)
             )
-            host_params["blocks"] = blocks
-        self.model = new_model
-        self.params = reshard_state(
-            host_params, new_model.param_specs(), mesh
-        )
-        # compiled programs are mesh-bound: drop them, re-plan the dispatch
-        # through the shared cache (the plans themselves may warm-hit)
-        self._decode_fns = {}
-        self.moe_plan = None
-        self.moe_prefill_plan = None
-        if new_model.cfg.family == "moe":
-            self.moe_plan = self._warm_moe_plan()
-            self.moe_prefill_plan = self._warm_prefill_plan()
-        self._prefill = self._prefill_for(new_model)
-        if self.adaptive:
-            events = self.planner.events if self.planner is not None else []
-            self.planner = self._make_planner()
-            self.planner.events = events
-        self._decode = self._decode_for(self.moe_plan)
-        # resume: re-prefill the surviving sequences on the new mesh
-        self.caches = None
-        if any(s is not None for s in self.slots):
-            self._prefill_slots()
+            new_model = Model(
+                old.cfg, mesh=mesh, moe_mode=old.moe_mode,
+                ep_over_pods=old.ep_over_pods, remat=old.remat, fsdp=old.fsdp,
+                moe_cap_factor=old.moe_cap_factor,
+                scan_layers=old.scan_layers, seq_shard=old.seq_shard,
+            )
+            if old.cfg.family == "moe" and new_model.e_phys != old.e_phys:
+                from ..models.moe import remap_expert_params
+
+                e_log = old.cfg.n_experts
+                host_params = dict(host_params)
+                blocks = dict(host_params["blocks"])
+                blocks["moe"] = remap_expert_params(
+                    blocks["moe"], e_log,
+                    old.e_phys // e_log, new_model.e_phys // e_log,
+                )
+                host_params["blocks"] = blocks
+            self.model = new_model
+            self.params = reshard_state(
+                host_params, new_model.param_specs(), mesh
+            )
+            # compiled programs are mesh-bound: drop them, re-plan the dispatch
+            # through the shared cache (the plans themselves may warm-hit)
+            self._decode_fns = {}
+            self.moe_plan = None
+            self.moe_prefill_plan = None
+            if new_model.cfg.family == "moe":
+                self.moe_plan = self._warm_moe_plan()
+                self.moe_prefill_plan = self._warm_prefill_plan()
+            self._prefill = self._prefill_for(new_model)
+            if self.adaptive:
+                events = self.planner.events if self.planner is not None else []
+                self.planner = self._make_planner()
+                self.planner.events = events
+            self._decode = self._decode_for(self.moe_plan)
+            # resume: re-prefill the surviving sequences on the new mesh
+            self.caches = None
+            if any(s is not None for s in self.slots):
+                self._prefill_slots()
+            sp.set(new_n=int(mesh.devices.size))
         event = cache_delta_event(
             self.plan_cache, before, reason,
-            old_n, int(mesh.devices.size), _time.perf_counter() - t0,
+            old_n, int(mesh.devices.size), _now() - t0,
         )
         self.resize_events.append(event)
         return event
@@ -341,8 +383,11 @@ class ServeEngine:
         """One engine step: admit if possible, else decode one token for
         the active batch.  Returns requests completed this step."""
         finished: List[Request] = []
+        self._step_count += 1
+        _C_STEPS.inc()
         if any(s is None for s in self.slots) and self.queue:
-            self._admit()
+            with _OBS.span("serve/admit", queued=len(self.queue)):
+                self._admit()
         if self.caches is None:
             return finished
         active = [i for i, s in enumerate(self.slots) if s is not None]
@@ -350,19 +395,22 @@ class ServeEngine:
             return finished
         for i in active:
             self.slots[i].generated.append(int(self._next_tok[i, 0]))
-        out = self._decode(
-            self.params, {"tokens": jnp.asarray(self._next_tok)},
-            self.caches, jnp.asarray(self.cur_len, jnp.int32),
-        )
-        if self.adaptive:
-            logits, self.caches, moe_stats = out
-            self._observe_moe(moe_stats)
-        else:
-            logits, self.caches = out
-        self.cur_len += 1
-        self._next_tok = np.asarray(
-            jnp.argmax(logits, axis=-1), np.int32
-        )[:, None]
+        with _OBS.span("serve/decode_step", step=self._step_count,
+                       cur_len=self.cur_len, active=len(active)):
+            out = self._decode(
+                self.params, {"tokens": jnp.asarray(self._next_tok)},
+                self.caches, jnp.asarray(self.cur_len, jnp.int32),
+            )
+            if self.adaptive:
+                logits, self.caches, moe_stats = out
+                self._observe_moe(moe_stats)
+            else:
+                logits, self.caches = out
+            self.cur_len += 1
+            self._next_tok = np.asarray(
+                jnp.argmax(logits, axis=-1), np.int32
+            )[:, None]
+        _C_TOKENS.inc(len(active))
         for i in active:
             s = self.slots[i]
             if (len(s.generated) >= s.max_new_tokens
@@ -370,6 +418,12 @@ class ServeEngine:
                 s.done = True
                 finished.append(s)
                 self.slots[i] = None
+                t_admit = self._admit_times.pop(s.rid, None)
+                if t_admit is not None:
+                    _H_REQUEST.observe(_now() - t_admit)
+        if (self.observe and self.refit_every > 0
+                and self._step_count % self.refit_every == 0):
+            self._refit()
         return finished
 
     def _observe_moe(self, moe_stats) -> Optional[ReplanEvent]:
@@ -384,6 +438,66 @@ class ServeEngine:
         if event is not None:
             self.moe_plan = self.planner.plan
             self._decode = self._decode_for(self.moe_plan)
+            _OBS.event("serve/replan", step=event.step,
+                       drift=float(event.drift), old_mode=event.old_mode,
+                       new_mode=event.new_mode)
+        return event
+
+    def _refit(self):
+        """Online re-calibration (the ROADMAP's closing loop): probe the
+        live decode dispatch pattern as a *bare* exchange (no FFN compute,
+        so the sample is pure), bridge it into the attached tracer via the
+        obs span bridge, and re-fit ``MachineParams`` from every pure
+        sample recorded so far.  Decode numerics are untouched — the probe
+        runs on throwaway data and only ``machine_params`` / the adaptive
+        planner's cost model are updated.  Returns the
+        :class:`~repro.runtime.controller.RefitEvent`, or ``None`` when
+        there is no MoE dispatch to probe or the fit did not converge."""
+        if self.moe_plan is None or self._tracer is None:
+            return None
+        from ..profile.calibrate import fit_trace
+        from ..runtime.controller import RefitEvent
+
+        with _OBS.span("serve/refit", step=self._step_count) as sp:
+            probed = serving.moe_exchange_probe(
+                self.model, self.moe_plan, self.B, cache=self.plan_cache,
+            )
+            if probed is not None:
+                plan, secs = probed
+                # closing this span bridges (plan, secs) into the tracer
+                # as a pure-exchange sample — same path production
+                # exchange spans take — BEFORE fit_trace reads the trace
+                with _OBS.span("serve/exchange_probe") as psp:
+                    psp.set(plan=plan, pure_exchange=True, seconds=secs)
+            ref = self.machine_params
+            if ref is None and self.planner is not None:
+                ref = self.planner.params
+            kw = {} if ref is None else {"ref": ref}
+            try:
+                res = fit_trace(self._tracer, name="online-refit", **kw)
+            except ValueError:
+                sp.set(fitted=False, why="no pure samples")
+                return None
+            if not res.converged:
+                sp.set(fitted=False, why="fit did not converge")
+                return None
+            self.machine_params = res.params
+            if self.planner is not None:
+                # subsequent drift re-selections price transports under
+                # the *measured* rates
+                self.planner.params = res.params
+            event = RefitEvent(
+                step=self._step_count,
+                params_name=res.params.name,
+                rel_rmse=float(res.gof.get("rel_rmse", float("nan"))),
+                n_samples=int(res.n_samples),
+            )
+            self.refit_events.append(event)
+            sp.set(fitted=True, params_name=event.params_name,
+                   rel_rmse=event.rel_rmse, n_samples=event.n_samples)
+            _OBS.event("serve/refit", step=event.step,
+                       params_name=event.params_name,
+                       rel_rmse=event.rel_rmse, n_samples=event.n_samples)
         return event
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:

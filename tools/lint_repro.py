@@ -1,6 +1,6 @@
 """Repo-specific AST lint — bug classes this codebase has actually hit.
 
-Three rules, each guarding an invariant the generic linters don't know
+Four rules, each guarding an invariant the generic linters don't know
 about:
 
 * **R1 mutable-dataclass-default** — a dataclass field whose default is a
@@ -16,6 +16,11 @@ about:
   must pass ``pure_exchange=`` explicitly: the default (True) feeds the
   sample into the NNLS rate fit, so an unlabeled impure timing (exchange
   fused with compute) silently skews every fitted machine rate.
+* **R4 raw-perf-counter** — library code under ``src/repro/`` must not
+  call ``time.perf_counter()`` directly (``repro.obs`` and
+  ``repro.profile`` excepted: they *define* the timing layer).  Use
+  ``repro.obs.now()`` or a span so wall time is observable through one
+  clock and the telemetry layer sees every timing site.
 
 Run as ``python -m tools.lint_repro [roots...]`` (defaults to ``src``
 ``benchmarks`` ``tools``); exits 1 if anything is flagged.  Findings
@@ -43,6 +48,11 @@ _SAFE_DEFAULT_CALLS = frozenset({
 #: modules allowed to call record_plan without the keyword (the definition
 #: module itself: its internal forwarding sets the semantics)
 _R3_EXEMPT = ("repro/profile/trace.py",)
+
+#: R4 applies only inside the library; these subpackages define the
+#: timing/telemetry layer and so hold the blessed perf_counter sites
+_R4_SCOPE = "src/repro/"
+_R4_EXEMPT_PARTS = ("repro/obs/", "repro/profile/")
 
 
 def _dotted(node: ast.AST) -> str:
@@ -164,6 +174,26 @@ def _check_record_plan(tree: ast.Module, path: Path,
             ))
 
 
+def _check_perf_counter(tree: ast.Module, path: Path,
+                        out: List[Finding]) -> None:
+    posix = str(path).replace("\\", "/")
+    if _R4_SCOPE not in posix:
+        return
+    if any(part in posix for part in _R4_EXEMPT_PARTS):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name == "perf_counter" or name.endswith(".perf_counter"):
+            out.append((
+                path, node.lineno, "R4-raw-perf-counter",
+                "direct time.perf_counter() in library code — use "
+                "repro.obs.now() (or wrap the region in an obs span) so "
+                "all wall-clock reads go through the telemetry layer",
+            ))
+
+
 def lint_file(path: Path) -> List[Finding]:
     try:
         tree = ast.parse(path.read_text(), filename=str(path))
@@ -173,6 +203,7 @@ def lint_file(path: Path) -> List[Finding]:
     _check_dataclass_defaults(tree, path, out)
     _check_hash_iteration(tree, path, out)
     _check_record_plan(tree, path, out)
+    _check_perf_counter(tree, path, out)
     return out
 
 
