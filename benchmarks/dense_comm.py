@@ -1,0 +1,179 @@
+"""Dense-collective benchmark: the plan-based allreduce / allgatherv /
+reduce_scatter of ``core.dense`` through the same selection/cache/measure
+protocol the sparse exchanges use.
+
+Two row families:
+
+* ``dense/select/*`` — DETERMINISTIC modeled selection (kind=modeled-*):
+  every candidate schedule is built and scored with the locality-aware
+  max-rate model at a paper-scale multi-region geometry (where the
+  hierarchical variant must beat the flat ring — flagged as
+  ``hier_beats_ring``) and at the CI smoke geometry.  Pure plan
+  arithmetic, gated exactly by ``benchmarks.compare``.
+* ``dense/measured/*`` — MEASURED device executions on the local
+  host-platform mesh through the ``dense_plan`` / ``dense_executor``
+  cache namespaces, with the result asserted equal to the jnp reference
+  (sum / concatenation of the per-device inputs) before timing.  With a
+  ``tracer`` each timing is recorded as a ``pure_exchange`` sample under
+  the plan's dense fingerprint, feeding the NNLS calibration fit exactly
+  like the sparse transports.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    TPU_V5E,
+    Topology,
+    default_plan_cache,
+    even_counts,
+    measure_dense_seconds,
+    pack_dense_input,
+    select_dense,
+    unpack_dense_output,
+)
+
+DENSE_BENCH_COLLECTIVES = ("allreduce", "allgatherv", "reduce_scatter")
+
+# paper-scale EP/DP group: 1024 processes, 32 per region (Section 5's
+# multi-region regime, where locality-aware schedules win)
+PAPER_PROCS = 1024
+PAPER_PPR = 32
+PAPER_VALUES = 1 << 20          # a ~1M-value gradient/weight vector
+
+
+def _bench_counts(collective: str, n_procs: int, n_values: int) -> np.ndarray:
+    """Deterministic per-segment counts; allgatherv gets *uneven* counts
+    (the v in allgatherv) so the modeled rows exercise the padded wire."""
+    counts = even_counts(n_values, n_procs)
+    if collective == "allgatherv":
+        # deterministic unevenness: +/- up to 25% in a fixed pattern
+        jitter = (np.arange(n_procs, dtype=np.int64) * 7919) % 5 - 2
+        counts = np.maximum(counts + jitter * (counts // 8), 1)
+    return counts
+
+
+def modeled_select_rows(
+    n_procs: int = PAPER_PROCS,
+    ppr: int = PAPER_PPR,
+    n_values: int = PAPER_VALUES,
+    params=TPU_V5E,
+) -> List[Tuple[str, float, str]]:
+    """Section-5 selection over every dense variant at the paper-scale
+    multi-region geometry plus the 8-device smoke geometry.  The
+    ``hier_beats_ring`` flag is the acceptance gate: at paper scale the
+    cost model must prefer the hierarchical schedule."""
+    out = []
+    for label, topo, n in (
+        ("paper", Topology(n_procs, ppr), n_values),
+        ("smoke", Topology(8, 4), 4096),
+    ):
+        for coll in DENSE_BENCH_COLLECTIVES:
+            counts = _bench_counts(coll, topo.n_procs, n)
+            plan, sel = select_dense(coll, counts, topo, variant="auto",
+                                     params=params)
+            times = "|".join(
+                f"{k}_us={v * 1e6:.2f}"
+                for k, v in sorted(sel.modeled_times.items())
+            )
+            hier_wins = (
+                "hier" in sel.modeled_times
+                and sel.modeled_times["hier"] < sel.modeled_times["ring"]
+            )
+            out.append((
+                f"dense/select/{label}/{coll}",
+                sel.modeled_times[sel.chosen] * 1e6,
+                f"kind=modeled-{params.name}|chosen={sel.chosen}"
+                f"|n_procs={topo.n_procs}|ppr={topo.procs_per_region}"
+                f"|rounds={plan.n_rounds}|{times}"
+                f"|hier_beats_ring={'yes' if hier_wins else 'no'}",
+            ))
+    return out
+
+
+def _reference(plan, vals: List[np.ndarray]) -> List[np.ndarray]:
+    """jnp-free numpy reference for the collective over per-device vals."""
+    P = plan.topo.n_procs
+    if plan.collective == "allgatherv":
+        cat = np.concatenate(vals)
+        return [cat for _ in range(P)]
+    total = np.sum(np.stack(vals), axis=0)
+    if plan.collective == "allreduce":
+        return [total for _ in range(P)]
+    bounds = np.cumsum(plan.counts)[:-1]
+    segs = np.split(total, bounds)
+    return [segs[p] for p in range(P)]
+
+
+def measured_dense_rows(
+    iters: int = 10,
+    warmup: int = 2,
+    n_values: int = 4096,
+    params=TPU_V5E,
+    tracer=None,
+) -> List[Tuple[str, float, str]]:
+    """MEASURED dense collectives on the local mesh: every variant the
+    geometry admits, planned and bound through the shared
+    :class:`PlanCache` (``dense_plan`` + audited ``dense_executor``
+    namespaces), equivalence-asserted against the numpy reference, then
+    timed with the shared jit/compile/warmup protocol."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core.dense import dense_variants
+
+    n_dev = jax.device_count()
+    ppr = 4 if n_dev % 4 == 0 else (2 if n_dev % 2 == 0 else 1)
+    topo = Topology(n_dev, ppr)
+    mesh = jax.make_mesh((n_dev,), ("proc",))
+    cache = default_plan_cache()
+    rng = np.random.default_rng(0)
+
+    out = []
+    for coll in DENSE_BENCH_COLLECTIVES:
+        counts = _bench_counts(coll, n_dev, n_values)
+        for variant in dense_variants(coll, topo):
+            plan, _sel = cache.dense_collective(coll, counts, topo,
+                                                variant=variant,
+                                                params=params)
+            fn = cache.dense_executor(plan, mesh, "proc")
+            # equivalence first: executor output == numpy reference
+            if coll == "allgatherv":
+                vals = [rng.normal(size=int(c)) for c in plan.counts]
+            else:
+                n_tot = int(plan.counts.sum())
+                vals = [rng.normal(size=n_tot) for _ in range(n_dev)]
+            got = unpack_dense_output(plan, fn(pack_dense_input(plan, vals)))
+            for g, r in zip(got, _reference(plan, vals)):
+                np.testing.assert_allclose(g, r, rtol=1e-12, atol=1e-12)
+            secs = measure_dense_seconds(
+                plan, mesh, "proc", iters=iters, warmup=warmup,
+                tracer=tracer, executor=fn,
+            )
+            out.append((
+                f"dense/measured/{coll}/{variant}", secs * 1e6,
+                f"kind=measured-device|devices={n_dev}"
+                f"|rounds={plan.n_rounds}|equiv=ok",
+            ))
+    ns = cache.snapshot()["namespaces"]
+    out.append((
+        "dense/plan_cache", 0.0,
+        f"kind=exact-plan|dense_plans={ns['dense_plan']['entries']}"
+        f"|dense_executors={ns['dense_executor']['entries']}",
+    ))
+    return out
+
+
+def dense_rows(smoke: bool, tracer=None) -> List[Tuple[str, float, str]]:
+    """The harness section: modeled selection (always, deterministic) +
+    measured device rows (small iteration counts under --smoke)."""
+    rows = modeled_select_rows()
+    if smoke:
+        rows += measured_dense_rows(iters=3, warmup=1, n_values=1024,
+                                    tracer=tracer)
+    else:
+        rows += measured_dense_rows(tracer=tracer)
+    return rows

@@ -128,6 +128,17 @@ def spmv_overlap_rows(rows: int, n_procs: int, tracer=None):
     return overlap_rows(rows, n_procs) + measured_overlap_rows(rows, tracer)
 
 
+def dense_comm_rows(smoke: bool, tracer=None):
+    """Dense plan-based collectives (allreduce/allgatherv/reduce_scatter):
+    deterministic Section-5 selection rows at paper scale (hier must beat
+    ring — the dense/select/* gate) plus measured 8-device executions with
+    jnp-reference equivalence asserted; pure_exchange samples feed the
+    --calibrate fit."""
+    from .dense_comm import dense_rows
+
+    return dense_rows(smoke, tracer)
+
+
 def elastic_replan_rows(rows: int):
     """Elastic re-plan cost (cold setup vs shrink vs warm grow-back vs
     straggler rebalance) through one plan cache: measured-host wall times
@@ -482,6 +493,8 @@ def build_sections(rows: int, smoke: bool, tracer=None):
              lambda: measured_setup_exchange_rows(rows, tracer)),
             ("moe_comm", lambda: moe_comm_rows(smoke=True,
                                                tracer=tracer)),
+            ("dense_comm", lambda: dense_comm_rows(smoke=True,
+                                                   tracer=tracer)),
             ("elastic", lambda: elastic_replan_rows(rows)),
             ("roofline", roofline_report.rows),
         ]
@@ -502,6 +515,7 @@ def build_sections(rows: int, smoke: bool, tracer=None):
         ("measured_setup_exchange",
          lambda: measured_setup_exchange_rows(rows, tracer)),
         ("moe_comm", lambda: moe_comm_rows(smoke=False, tracer=tracer)),
+        ("dense_comm", lambda: dense_comm_rows(smoke=False, tracer=tracer)),
         ("elastic", lambda: elastic_replan_rows(rows)),
         ("roofline", roofline_report.rows),
     ]

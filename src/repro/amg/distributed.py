@@ -142,6 +142,7 @@ class DistributedHierarchy:
         spmv_variant: str = "auto",
         spmv_vmem_limit: Optional[int] = None,
         spmv_overlap: str = "auto",
+        coarse_gather: str = "off",
     ):
         self.levels = levels
         self.mesh = mesh
@@ -159,6 +160,12 @@ class DistributedHierarchy:
         self.spmv_vmem_limit = spmv_vmem_limit
         # the exchange/compute-overlap policy (auto | on | off)
         self.spmv_overlap = spmv_overlap
+        # coarsest-level dense allgatherv policy: "off" keeps the
+        # distributed Chebyshev; "auto"/"hier"/"ring" gather the coarse
+        # rhs with a plan-based dense collective and smooth replicated
+        # (selection recorded in coarse_selection)
+        self.coarse_gather = coarse_gather
+        self.coarse_selection = None
         # populated by setup_partitioned: the distributed-setup record
         # (per-level blocks + exchange accounting), None for host lowering
         self.setup_info: Optional[DistributedSetup] = None
@@ -187,6 +194,7 @@ class DistributedHierarchy:
         spmv_vmem_limit: Optional[int] = None,
         spmv_block_cols: int = DEFAULT_BLOCK_COLS,
         spmv_overlap: str = "auto",
+        coarse_gather: str = "off",
         row_weights: Optional[np.ndarray] = None,
     ) -> "DistributedHierarchy":
         """Partition every level and init its collectives once (persistent).
@@ -272,7 +280,8 @@ class DistributedHierarchy:
                      strategy, params, value_bytes,
                      spmv_variant=spmv_variant,
                      spmv_vmem_limit=spmv_vmem_limit,
-                     spmv_overlap=spmv_overlap)
+                     spmv_overlap=spmv_overlap,
+                     coarse_gather=coarse_gather)
         dh._host = h
         return dh
 
@@ -297,6 +306,7 @@ class DistributedHierarchy:
         spmv_vmem_limit: Optional[int] = None,
         spmv_block_cols: int = DEFAULT_BLOCK_COLS,
         spmv_overlap: str = "auto",
+        coarse_gather: str = "off",
     ) -> "DistributedHierarchy":
         """End-to-end distributed build: partitioned fine matrix -> solve.
 
@@ -369,7 +379,8 @@ class DistributedHierarchy:
                      strategy, params, value_bytes,
                      spmv_variant=spmv_variant,
                      spmv_vmem_limit=spmv_vmem_limit,
-                     spmv_overlap=spmv_overlap)
+                     spmv_overlap=spmv_overlap,
+                     coarse_gather=coarse_gather)
         dh.setup_info = setup
         return dh
 
@@ -383,6 +394,87 @@ class DistributedHierarchy:
             overlap=(op.overlap_mode == "on"),
         )
 
+    def _bind_coarse(self) -> Callable:
+        """Coarsest-level solve by dense allgatherv + replicated Chebyshev.
+
+        The coarsest packed rhs ``[P, pad]`` is exactly the allgatherv
+        input layout (``counts`` = real block sizes, ``cmax`` = pad):
+        each device contributes its block, the plan-based gather
+        replicates the full coarse vector, and a dense padded coarse
+        operator (zeros at padding rows/cols, so no unpadding is needed)
+        runs the same degree-24 Chebyshev arithmetic as :meth:`_cheby` —
+        every device then keeps its own block of the result.  The
+        :class:`~repro.core.dense.DenseSelection` lands in
+        :attr:`coarse_selection`.
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as PSpec
+
+        from ..compat import shard_map
+        from ..core import dense_round_runner
+        from ..sparse.partition import partitioned_to_global
+
+        lv = self.levels[-1]
+        offs = np.asarray(lv.A.part.col_offsets, dtype=np.int64)
+        counts = np.diff(offs)
+        variant = "auto" if self.coarse_gather == "auto" else \
+            self.coarse_gather
+        plan, sel = self.cache.dense_collective(
+            "allgatherv", counts, self.topo, variant=variant,
+            value_bytes=self.value_bytes, params=self.params,
+        )
+        self.coarse_selection = sel
+        run = dense_round_runner(plan, self.axis_name)
+
+        P_, pad = self.topo.n_procs, lv.pad
+        Ag = partitioned_to_global(lv.A.part)
+        # global index -> padded position p*pad + local slot
+        pos = np.concatenate([
+            p * pad + np.arange(int(counts[p]), dtype=np.int64)
+            for p in range(P_)
+        ])
+        Ad = np.zeros((P_ * pad, P_ * pad), dtype=self.dtype)
+        rows = Ag.row_indices().astype(np.int64)
+        cols = Ag.indices.astype(np.int64)
+        np.add.at(Ad, (pos[rows], pos[cols]), Ag.data.astype(self.dtype))
+        Ad_dev = jnp.asarray(Ad)
+        dinv = jnp.asarray(np.asarray(lv.dinv).reshape(-1))
+
+        rho = lv.rho
+        upper = 1.1 * rho
+        lower = 0.30 * rho
+        theta = 0.5 * (upper + lower)
+        delta = 0.5 * (upper - lower)
+        sigma = theta / delta
+
+        def coarse_cheby(b, degree=24):
+            x = jnp.zeros_like(b)
+            rho_k = 1.0 / sigma
+            r = dinv * (b - Ad_dev @ x)
+            p = r / theta
+            x = x + p
+            for _ in range(degree - 1):
+                rho_next = 1.0 / (2.0 * sigma - rho_k)
+                r = dinv * (b - Ad_dev @ x)
+                p = rho_next * rho_k * p + 2.0 * rho_next / delta * r
+                x = x + p
+                rho_k = rho_next
+            return x
+
+        def per_device(b_blk):              # [1, pad] own packed block
+            rank = jax.lax.axis_index(self.axis_name)
+            zero = jnp.zeros((), rank.dtype)
+            buf = jnp.zeros((P_, pad), b_blk.dtype)
+            buf = jax.lax.dynamic_update_slice(buf, b_blk, (rank, zero))
+            full = run(buf).reshape(-1)     # replicated coarse rhs
+            x = coarse_cheby(full).reshape(P_, pad)
+            return jax.lax.dynamic_slice(x, (rank, zero), (1, pad))
+
+        spec = PSpec(self.axis_name)
+        return shard_map(per_device, mesh=self.mesh, in_specs=(spec,),
+                         out_specs=spec, check_rep=False)
+
     def _build_device_fns(self) -> None:
         import jax
 
@@ -395,6 +487,9 @@ class DistributedHierarchy:
             self._bind(lv.P) if lv.P is not None else None
             for lv in self.levels
         ]
+        self._coarse_fn = (
+            self._bind_coarse() if self.coarse_gather != "off" else None
+        )
         self._step = jax.jit(self._make_step())
 
     def _cheby(self, k: int, x, b, degree: int):
@@ -428,6 +523,8 @@ class DistributedHierarchy:
         lv = self.levels[k]
         zero = jnp.zeros_like(b)
         if lv.R is None or k == len(self.levels) - 1:
+            if self._coarse_fn is not None:
+                return self._coarse_fn(b)
             return self._cheby(k, zero, b, degree=24)
         x = self._cheby(k, zero, b, degree=3)       # pre-smooth
         r = b - self._Amv[k](x)
@@ -558,6 +655,7 @@ class DistributedHierarchy:
                 spmv_variant=self.spmv_variant,
                 spmv_vmem_limit=self.spmv_vmem_limit,
                 spmv_overlap=self.spmv_overlap,
+                coarse_gather=self.coarse_gather,
                 row_weights=row_weights,
             )
             sp.set(new_n=new.topo.n_procs)
@@ -616,6 +714,9 @@ class DistributedHierarchy:
                 f"inter_bytes={t['inter_bytes']:8d}"
                 + (f" R={lv.R.strategy} P={lv.P.strategy}" if lv.R else "")
             )
+        if self.coarse_selection is not None:
+            lines.append(f"  coarse_gather={self.coarse_gather}: "
+                         f"{self.coarse_selection}")
         return "\n".join(lines)
 
     def measure_exchange_seconds(

@@ -41,6 +41,23 @@ from .collectives import (
 )
 from .neighborhood import NeighborAlltoallV
 from .dynexchange import DiscoveryStats, SparseDynamicExchange
+from .dense import (
+    DENSE_COLLECTIVES,
+    DensePlan,
+    DenseRound,
+    DenseSelection,
+    bind_dense,
+    build_dense_plan,
+    dense_fingerprint,
+    dense_round_runner,
+    dense_time,
+    dense_variants,
+    even_counts,
+    measure_dense_seconds,
+    pack_dense_input,
+    select_dense,
+    unpack_dense_output,
+)
 from .cache import (
     PlanCache,
     default_plan_cache,
@@ -51,6 +68,11 @@ from .cache import (
 __all__ = [
     "PlanCache", "default_plan_cache", "pattern_fingerprint", "plan_cache_key",
     "DiscoveryStats", "SparseDynamicExchange",
+    "DENSE_COLLECTIVES", "DensePlan", "DenseRound", "DenseSelection",
+    "bind_dense", "build_dense_plan", "dense_fingerprint",
+    "dense_round_runner", "dense_time", "dense_variants", "even_counts",
+    "measure_dense_seconds", "pack_dense_input", "select_dense",
+    "unpack_dense_output",
     "CommPattern", "CommPlan", "CommStep", "Message", "PlanStats", "StepStats",
     "Topology", "color_rounds", "padded_wire_volume",
     "STRATEGIES", "build_plan", "plan_full", "plan_partial", "plan_standard",

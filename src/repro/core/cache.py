@@ -129,13 +129,14 @@ class PlanCache:
     truth; :meth:`snapshot` is the one documented schema::
 
         {"counters":   {hits, misses, exec_hits, exec_misses, evictions},
-         "namespaces": {ns: {hits, misses, entries}},   # 4 namespaces
+         "namespaces": {ns: {hits, misses, entries}},   # 6 namespaces
          "entries": int, "max_entries": int,
          "init_seconds_spent": float, "init_seconds_saved": float}
 
     where the flat ``counters`` aggregate plan namespaces (``collective``
-    + ``moe_plan`` → hits/misses) and executor namespaces (``executor``
-    + ``moe_executor`` → exec_hits/exec_misses).  :attr:`hits` &c are
+    + ``moe_plan`` + ``dense_plan`` → hits/misses) and executor namespaces
+    (``executor`` + ``moe_executor`` + ``dense_executor`` →
+    exec_hits/exec_misses).  :attr:`hits` &c are
     read-only properties over that aggregation, and :meth:`counters` /
     :meth:`stats` are backward-compatible aliases — both ``repro.obs``
     and ``runtime.controller.cache_delta_event`` read this one schema.
@@ -151,10 +152,14 @@ class PlanCache:
     # routing-pattern fingerprint (see models.moe.moe_plan_for)
     _moe_plans: Dict[Tuple, Tuple[Any, float]] = field(default_factory=dict)
     _moe_execs: Dict[Tuple, Callable] = field(default_factory=dict)
+    # dense-collective surface: ((DensePlan, DenseSelection), init_seconds)
+    # keyed on the dense fingerprint + variant + params (core.dense)
+    _dense_plans: Dict[Tuple, Tuple[Any, float]] = field(default_factory=dict)
+    _dense_execs: Dict[Tuple, Callable] = field(default_factory=dict)
     _ns_counts: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
-    PLAN_NAMESPACES = ("collective", "moe_plan")
-    EXEC_NAMESPACES = ("executor", "moe_executor")
+    PLAN_NAMESPACES = ("collective", "moe_plan", "dense_plan")
+    EXEC_NAMESPACES = ("executor", "moe_executor", "dense_executor")
 
     # ------------------------------------------------- derived counters
     def _ns_sum(self, namespaces: Tuple[str, ...], which: str) -> int:
@@ -299,6 +304,54 @@ class PlanCache:
         self._insert(self._moe_execs, key, fn, "moe_executor")
         return fn
 
+    def dense_collective(
+        self,
+        collective: str,
+        counts: np.ndarray,
+        topo: Topology,
+        variant: str = "auto",
+        value_bytes: int = 8,
+        params: MachineParams = TPU_V5E,
+    ) -> Tuple[Any, Any]:
+        """Cached ``dense.select_dense`` — returns ``(DensePlan,
+        DenseSelection)``; a hit skips building and scoring the candidate
+        round schedules (and re-verification)."""
+        from .dense import dense_cache_key, select_dense
+
+        key = dense_cache_key(collective, counts, topo, variant,
+                              value_bytes, params)
+        entry = self._lookup(self._dense_plans, key, "dense_plan")
+        if entry is not None:
+            self.init_seconds_saved += entry[1]
+            return entry[0]
+        t0 = _now()
+        plan, sel = select_dense(collective, counts, topo, variant,
+                                 value_bytes, params)
+        secs = _now() - t0
+        self.init_seconds_spent += secs
+        self._insert(self._dense_plans, key, ((plan, sel), secs),
+                     "dense_plan")
+        return plan, sel
+
+    def dense_executor(self, plan, mesh, axis_name: str) -> Callable:
+        """Cached ``dense.bind_dense`` (jaxpr-audited on the miss, like
+        :meth:`executor`), keyed on the plan fingerprint + binding."""
+        from .dense import bind_dense
+
+        key = (plan.fingerprint, mesh, axis_name)
+        fn = self._lookup(self._dense_execs, key, "dense_executor")
+        if fn is not None:
+            return fn
+        fn = bind_dense(plan, mesh, axis_name)
+        from ..verify import audit_dense_executor, verify_enabled
+
+        if verify_enabled():
+            t0 = _now()
+            audit_dense_executor(fn, plan, axis_name)
+            _H_VERIFY.observe(_now() - t0, ns="dense_executor_audit")
+        self._insert(self._dense_execs, key, fn, "dense_executor")
+        return fn
+
     def snapshot(self) -> Dict[str, Any]:
         """The one documented stats schema (see class docstring): flat
         aggregates under ``"counters"``, per-namespace breakdowns under
@@ -309,6 +362,8 @@ class PlanCache:
             "executor": len(self._execs),
             "moe_plan": len(self._moe_plans),
             "moe_executor": len(self._moe_execs),
+            "dense_plan": len(self._dense_plans),
+            "dense_executor": len(self._dense_execs),
         }
         return {
             "counters": {
@@ -350,6 +405,8 @@ class PlanCache:
         self._execs.clear()
         self._moe_plans.clear()
         self._moe_execs.clear()
+        self._dense_plans.clear()
+        self._dense_execs.clear()
 
 
 _DEFAULT_CACHE: Optional[PlanCache] = None

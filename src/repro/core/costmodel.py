@@ -96,6 +96,10 @@ def stats_time(stats: PlanStats, topo: Topology, params: MachineParams) -> float
     by_name = {s.name: step_time(s, topo, params, vb) for s in stats.steps}
     if set(by_name) == {"p2p"}:
         return by_name["p2p"]
+    if not set(by_name) <= {"p2p", "l", "s", "g", "r"}:
+        # generic round schedules (dense collectives: steps d0..dk) are
+        # bulk-synchronous and dependency-ordered -> plain serial sum.
+        return float(sum(by_name.values()))
     serial = by_name.get("s", 0.0) + by_name.get("g", 0.0) + by_name.get("r", 0.0)
     return max(by_name.get("l", 0.0), serial)
 
@@ -334,6 +338,10 @@ def _sample_feature(sample: RateSample, theta: np.ndarray) -> np.ndarray:
     }
     if set(by_name) == {"p2p"}:
         return by_name["p2p"]
+    if not set(by_name) <= {"p2p", "l", "s", "g", "r"}:
+        # generic round schedules (dense d0..dk): serial sum, mirroring
+        # stats_time's composition so the fit sees the same arithmetic.
+        return np.sum(list(by_name.values()), axis=0)
     zero = np.zeros(5)
     serial = (by_name.get("s", zero) + by_name.get("g", zero)
               + by_name.get("r", zero))

@@ -86,7 +86,10 @@ from ..core.dynexchange import DiscoveryStats
 from ..core.selection import SelectionReport
 from ..kernels.moe_pack import combine as pack_combine
 from ..kernels.moe_pack import pack as pack_gather
+from ..obs import default_obs
 from .common import ArchConfig, Initializer, activation
+
+_OBS = default_obs()
 
 MODES = ("dense", "a2a", "hier", "hier_dedup")
 
@@ -542,6 +545,88 @@ def moe_param_specs(cfg: ArchConfig, plan: MoEPlan) -> Dict:
         p["ws_up"] = P(None, None, "model")
         p["ws_down"] = P(None, "model", None)
     return p
+
+
+EXPERT_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+def gather_expert_weights(
+    moe_params: Dict,
+    plan: MoEPlan,
+    mesh: Mesh,
+    method: str = "auto",
+    cache=None,
+    params: MachineParams = TPU_V5E,
+):
+    """Replicate the EP-sharded expert weights with a plan-based dense
+    allgatherv — ``(gathered_params, DenseSelection)``.
+
+    The expert tensors (``w_gate``/``w_up``/``w_down``, sharded over the
+    EP axis) are flattened per device into one segment and gathered in a
+    single dense collective over :func:`dispatch_topology` (so region
+    structure matches the dispatch transport), selected by the Section-5
+    cost model (``method="auto"``) or pinned (``"hier"``/``"ring"``) — the
+    weight-replication step of a dense fallback forward, an elastic
+    EP-group rebuild, or a checkpoint re-shard.  Router and shared-expert
+    weights are already replicated and pass through untouched.  The
+    returned :class:`~repro.core.dense.DenseSelection` is the recorded
+    choice, the way ``DistOp`` records ``kern=``/``ov=``.
+    """
+    from ..compat import shard_map
+    from ..core import dense_round_runner
+
+    if len(plan.ep_axes) != 1:
+        raise ValueError(
+            f"gather_expert_weights needs a single EP mesh axis, got "
+            f"{plan.ep_axes!r}"
+        )
+    axis = plan.ep_axes[0]
+    ep, e_per_dev = plan.ep_size, plan.e_per_dev
+    gshapes = {k: tuple(moe_params[k].shape) for k in EXPERT_WEIGHT_KEYS}
+    lshapes = {k: (s[0], e_per_dev) + s[2:] for k, s in gshapes.items()}
+    sizes = {k: int(np.prod(s)) for k, s in lshapes.items()}
+    chunk = sum(sizes.values())
+
+    cache = cache if cache is not None else default_plan_cache()
+    topo = dispatch_topology(plan)
+    variant = "auto" if method == "auto" else method
+    with _OBS.span("moe/expert_gather_plan", method=method, ep=ep,
+                   chunk=chunk) as sp:
+        dplan, sel = cache.dense_collective(
+            "allgatherv", np.full(ep, chunk, dtype=np.int64), topo,
+            variant=variant, params=params,
+        )
+        sp.set(chosen=sel.chosen)
+    run = dense_round_runner(dplan, axis)
+
+    def per_device(*leaves):
+        rank = jax.lax.axis_index(axis)
+        zero = jnp.zeros((), rank.dtype)
+        flat = jnp.concatenate([x.reshape(-1) for x in leaves])
+        buf = jnp.zeros((ep, chunk), flat.dtype)
+        buf = jax.lax.dynamic_update_slice(buf, flat[None], (rank, zero))
+        full = run(buf)                      # [ep, chunk] replicated
+        outs, off = [], 0
+        for k in EXPERT_WEIGHT_KEYS:
+            part = full[:, off:off + sizes[k]].reshape((ep,) + lshapes[k])
+            # [ep, L, e_per_dev, ...] -> [L, ep*e_per_dev, ...]: devices
+            # hold contiguous expert blocks in rank order, so the outer
+            # ep axis folds straight back into e_phys order
+            part = jnp.moveaxis(part, 0, 1).reshape(gshapes[k])
+            outs.append(part)
+            off += sizes[k]
+        return tuple(outs)
+
+    fn = shard_map(
+        per_device, mesh=mesh,
+        in_specs=(P(None, axis, None, None),) * len(EXPERT_WEIGHT_KEYS),
+        out_specs=(P(),) * len(EXPERT_WEIGHT_KEYS),
+        check_rep=False,
+    )
+    gathered = jax.jit(fn)(*(moe_params[k] for k in EXPERT_WEIGHT_KEYS))
+    out = dict(moe_params)
+    out.update(dict(zip(EXPERT_WEIGHT_KEYS, gathered)))
+    return out, sel
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ from .invariants import (
     VerifyError,
     verify_cache_value,
     verify_collective,
+    verify_dense_plan,
     verify_device_ell,
     verify_device_plan,
     verify_ell_blocked,
@@ -43,6 +44,7 @@ from .invariants import (
 from .jaxpr_audit import (
     COLLECTIVE_PRIMITIVES,
     CollectiveRecord,
+    audit_dense_executor,
     audit_executor,
     collective_signature,
     trace_collectives,
@@ -68,12 +70,14 @@ __all__ = [
     "verify_ell_blocked",
     "verify_moe_plan",
     "verify_moe_dispatch",
+    "verify_dense_plan",
     "verify_cache_value",
     "COLLECTIVE_PRIMITIVES",
     "CollectiveRecord",
     "collective_signature",
     "trace_collectives",
     "audit_executor",
+    "audit_dense_executor",
     "flat_kernel_actual_bytes",
     "blocked_kernel_actual_bytes",
     "verify_kernel_budget",

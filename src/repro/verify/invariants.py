@@ -608,6 +608,97 @@ def verify_moe_dispatch(plan, tokens_per_lane: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# dense collective plans (conflict-freedom + contribution conservation)
+# ---------------------------------------------------------------------------
+
+
+def verify_dense_plan(plan) -> None:
+    """Full check of a ``core.dense.DensePlan``.
+
+    Structural: one segment per device, non-negative counts, in-range and
+    duplicate-free segment lists.  Conflict-freedom: every round reduces to
+    a :class:`Round` and must pass :func:`verify_round_schedule` (partial
+    permutation = one well-formed ppermute).  Conservation: the schedule is
+    executed symbolically with *contribution vectors* as payload —
+    ``contrib[p][s]`` is the 0/1 vector of source devices whose
+    contribution to segment ``s`` device ``p`` currently holds — and the
+    final state must be exactly the collective's definition: allreduce →
+    every device holds every contribution of every segment; reduce_scatter
+    → device ``p`` holds every contribution of segment ``p``; allgatherv →
+    every device holds exactly the owner's copy of every segment.
+    """
+    P = plan.topo.n_procs
+    n_seg = len(plan.counts)
+    if n_seg != P:
+        _fail("dense plan must carry one segment per device",
+              segments=n_seg, n_procs=P)
+    if np.any(plan.counts < 0):
+        s = int(np.argmax(plan.counts < 0))
+        _fail("negative segment count", segment=s,
+              count=int(plan.counts[s]))
+    if plan.collective not in ("allreduce", "allgatherv", "reduce_scatter"):
+        _fail("unknown dense collective", collective=plan.collective)
+
+    for r, rnd in enumerate(plan.rounds):
+        if len(rnd.segs) != len(rnd.pairs):
+            _fail("dense round segment lists disagree with pair count",
+                  round=r, pairs=len(rnd.pairs), segs=len(rnd.segs))
+        for (src, dst), segs in zip(rnd.pairs, rnd.segs):
+            if len(segs) and (segs.min() < 0 or segs.max() >= n_seg):
+                _fail("dense round moves a segment outside the plan",
+                      round=r, src=src, dst=dst,
+                      segment=int(segs.max()), segments=n_seg)
+            if len(np.unique(segs)) != len(segs):
+                _fail("dense round sends a segment twice in one message",
+                      round=r, src=src, dst=dst)
+    verify_round_schedule(
+        [Round(list(r.pairs), list(r.segs), list(r.segs))
+         for r in plan.rounds],
+        step=f"dense/{plan.collective}/{plan.variant}",
+    )
+
+    # symbolic execution with contribution-set payloads
+    eye = np.eye(P, dtype=np.int64)
+    if plan.collective == "allgatherv":
+        contrib = [np.zeros((n_seg, P), dtype=np.int64) for _ in range(P)]
+        for p in range(P):
+            contrib[p][p] = eye[p]
+    else:
+        contrib = [np.tile(eye[p], (n_seg, 1)) for p in range(P)]
+    for r, rnd in enumerate(plan.rounds):
+        payloads = [
+            (dst, segs, contrib[src][segs].copy())
+            for (src, dst), segs in zip(rnd.pairs, rnd.segs)
+        ]
+        for dst, segs, pay in payloads:
+            if rnd.reduce:
+                contrib[dst][segs] += pay
+            else:
+                contrib[dst][segs] = pay
+
+    ones = np.ones(P, dtype=np.int64)
+    for p in range(P):
+        if plan.collective == "allreduce":
+            bad = np.flatnonzero(~(contrib[p] == ones).all(axis=1))
+            if len(bad):
+                s = int(bad[0])
+                _fail("allreduce segment not an exact sum of all "
+                      "contributions", rank=p, segment=s,
+                      contributions=contrib[p][s].tolist())
+        elif plan.collective == "reduce_scatter":
+            if not np.array_equal(contrib[p][p], ones):
+                _fail("reduce_scatter own segment not an exact sum of all "
+                      "contributions", rank=p,
+                      contributions=contrib[p][p].tolist())
+        else:  # allgatherv
+            if not np.array_equal(contrib[p], eye):
+                s = int(np.argmax((contrib[p] != eye).any(axis=1)))
+                _fail("allgatherv segment is not exactly the owner's copy "
+                      "(dropped, duplicated or summed values)", rank=p,
+                      segment=s, contributions=contrib[p][s].tolist())
+
+
+# ---------------------------------------------------------------------------
 # cache-insertion dispatch (the REPRO_VERIFY hook)
 # ---------------------------------------------------------------------------
 
@@ -628,3 +719,11 @@ def verify_cache_value(ns: str, value) -> None:
         plan = value[0] if isinstance(value, tuple) else value
         if hasattr(plan, "e_phys"):
             verify_moe_plan(plan)
+    elif ns == "dense_plan":
+        # stored as ((DensePlan, DenseSelection), init_seconds) — unwrap
+        # tuples until the object with a round schedule surfaces
+        plan = value
+        while isinstance(plan, tuple) and not hasattr(plan, "rounds"):
+            plan = plan[0]
+        if hasattr(plan, "rounds"):
+            verify_dense_plan(plan)

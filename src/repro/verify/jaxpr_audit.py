@@ -175,6 +175,62 @@ def audit_executor(fn, dplan, axis_name: str,
     return records
 
 
+def audit_dense_executor(fn, plan, axis_name: str,
+                         dtype=np.float32) -> List[CollectiveRecord]:
+    """Prove a bound dense executor implements exactly its DensePlan.
+
+    Traces the executor on the collective's global input shape and checks
+    one ``ppermute`` per plan round in order — the plan's pair set, the
+    bound axis, the round's padded slab width (segments gathered per
+    device), the payload dtype — and the usual uniformity conditions (no
+    collective under data-dependent control flow, no off-plan kinds).
+    """
+    import jax
+
+    P = plan.topo.n_procs
+    n_seg, cmax = len(plan.counts), plan.cmax
+    if plan.collective == "allgatherv":
+        aval = jax.ShapeDtypeStruct((P, cmax), dtype)
+    else:
+        aval = jax.ShapeDtypeStruct((P, n_seg, cmax), dtype)
+    records = trace_collectives(fn, aval)
+
+    for rec in records:
+        if rec.in_control_flow:
+            _fail("collective under data-dependent control flow (devices "
+                  "could disagree on whether it executes)", kind=rec.kind,
+                  path="/".join(rec.control_path))
+        if rec.kind != "ppermute":
+            _fail("off-plan collective kind in a dense executor",
+                  kind=rec.kind)
+
+    if len(records) != len(plan.rounds):
+        _fail("traced ppermute count disagrees with the dense plan's "
+              "rounds", traced=len(records), plan_rounds=len(plan.rounds))
+    for r, (rec, rnd) in enumerate(zip(records, plan.rounds)):
+        if rec.perm is None or set(rec.perm) != set(
+                (int(s), int(d)) for s, d in rnd.pairs):
+            _fail("traced permutation disagrees with the dense round",
+                  collective=plan.collective, variant=plan.variant,
+                  round=r, traced=rec.perm, plan=tuple(rnd.pairs))
+        axes = rec.axis_name
+        if isinstance(axes, (tuple, list)):
+            ok = axis_name in axes
+        else:
+            ok = axes == axis_name
+        if not ok:
+            _fail("dense collective bound to the wrong mesh axis",
+                  round=r, traced=axes, expected=axis_name)
+        if rec.shape and rec.shape[0] != rnd.width_segments():
+            _fail("traced slab width disagrees with the dense round",
+                  round=r, traced=rec.shape[0],
+                  plan=rnd.width_segments())
+        if rec.dtype is not None and np.dtype(rec.dtype) != np.dtype(dtype):
+            _fail("dense collective payload dtype disagrees with the "
+                  "input", round=r, traced=rec.dtype, expected=dtype)
+    return records
+
+
 __all__ = [
     "VerifyError",
     "COLLECTIVE_PRIMITIVES",
@@ -182,4 +238,5 @@ __all__ = [
     "collective_signature",
     "trace_collectives",
     "audit_executor",
+    "audit_dense_executor",
 ]

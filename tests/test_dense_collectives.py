@@ -1,0 +1,227 @@
+"""Unit tests for ``core.dense``: plan-based dense collectives.
+
+Host-side coverage (device execution lives in
+``tests/multidevice_progs/check_dense_collectives.py``): round schedules
+verify (conflict-free + conserving), the host oracle matches independent
+references on uneven counts and non-divisible region sizes, Section-5
+selection prefers the hierarchical schedule at paper-scale multi-region
+geometries, the PlanCache ``dense_plan`` namespace hits on re-request,
+and fingerprints are stable across processes regardless of the hash seed
+(the PYTHONHASHSEED determinism contract CI pins).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DENSE_COLLECTIVES,
+    PlanCache,
+    Topology,
+    build_dense_plan,
+    dense_fingerprint,
+    dense_time,
+    dense_variants,
+    even_counts,
+    select_dense,
+    unpack_dense_output,
+    pack_dense_input,
+)
+from repro.core.costmodel import TPU_V5E
+from repro.verify import verify_dense_plan
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+GEOMETRIES = [(8, 4), (8, 2), (8, 1), (6, 3), (12, 4), (4, 2)]
+
+
+def uneven_counts(n_procs: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).integers(1, 23, size=n_procs)
+
+
+def reference(plan, vals):
+    """Independent semantics: sum / concat / owned-segment-of-sum."""
+    P = plan.topo.n_procs
+    if plan.collective == "allgatherv":
+        cat = np.concatenate(vals)
+        return [cat] * P
+    total = np.sum(np.stack(vals), axis=0)
+    if plan.collective == "allreduce":
+        return [total] * P
+    segs = np.split(total, np.cumsum(plan.counts)[:-1])
+    return [segs[p] for p in range(P)]
+
+
+def inputs_for(plan, seed=1):
+    rng = np.random.default_rng(seed)
+    if plan.collective == "allgatherv":
+        return [rng.normal(size=int(c)) for c in plan.counts]
+    n = int(plan.counts.sum())
+    return [rng.normal(size=n) for _ in range(plan.topo.n_procs)]
+
+
+def all_plans():
+    for n_procs, ppr in GEOMETRIES:
+        topo = Topology(n_procs, ppr)
+        for coll in DENSE_COLLECTIVES:
+            for variant in dense_variants(coll, topo):
+                yield build_dense_plan(coll, uneven_counts(n_procs), topo,
+                                       variant)
+
+
+@pytest.mark.parametrize("plan", all_plans(),
+                         ids=lambda p: f"{p.strategy}-{p.topo.n_procs}p"
+                                       f"{p.topo.procs_per_region}r")
+def test_schedule_verifies_and_oracle_matches_reference(plan):
+    verify_dense_plan(plan)   # conflict-free rounds + symbolic conservation
+    vals = inputs_for(plan)
+    got = plan.execute_numpy(vals)
+    for g, r in zip(got, reference(plan, vals)):
+        np.testing.assert_allclose(g, r, rtol=1e-13, atol=1e-13)
+
+
+def test_pack_unpack_roundtrip():
+    plan = build_dense_plan("allgatherv", uneven_counts(8), Topology(8, 4),
+                            "hier")
+    vals = inputs_for(plan)
+    packed = pack_dense_input(plan, vals)
+    assert packed.shape == (8, plan.cmax)
+    for p in range(8):
+        c = int(plan.counts[p])
+        np.testing.assert_array_equal(packed[p, :c], vals[p])
+        assert not packed[p, c:].any()
+    # a fully-gathered padded buffer unpacks to the concatenated vector
+    buf = np.zeros((8, len(plan.counts), plan.cmax))
+    for s in range(8):
+        buf[:, s, : int(plan.counts[s])] = vals[s]
+    cat = np.concatenate(vals)
+    for g in unpack_dense_output(plan, buf):
+        np.testing.assert_array_equal(g, cat)
+
+
+def test_rd_requires_power_of_two_allreduce():
+    with pytest.raises(ValueError):
+        build_dense_plan("allreduce", uneven_counts(6), Topology(6, 3), "rd")
+    with pytest.raises(ValueError):
+        build_dense_plan("allgatherv", uneven_counts(8), Topology(8, 4),
+                         "rd")
+
+
+def test_unknown_collective_rejected():
+    with pytest.raises(ValueError):
+        build_dense_plan("alltoall", uneven_counts(8), Topology(8, 4),
+                         "ring")
+
+
+def test_selection_prefers_hier_at_paper_scale():
+    """The acceptance gate: at the paper's multi-region scale the cost
+    model must score the hierarchical schedule below the flat ring for
+    every collective (and auto-select it for the non-power-of-2-free
+    cases)."""
+    topo = Topology(1024, 32)
+    counts = even_counts(1 << 20, 1024)
+    for coll in DENSE_COLLECTIVES:
+        plan, sel = select_dense(coll, counts, topo, variant="auto")
+        assert sel.modeled_times["hier"] < sel.modeled_times["ring"], sel
+        assert sel.chosen == "hier", sel
+        assert plan.variant == "hier"
+        assert f"dense/{coll}" in str(sel) and "selected=hier" in str(sel)
+
+
+def test_selection_modeled_times_are_plan_times():
+    topo = Topology(8, 4)
+    counts = uneven_counts(8)
+    _plan, sel = select_dense("allreduce", counts, topo, variant="auto")
+    for variant, t in sel.modeled_times.items():
+        p = build_dense_plan("allreduce", counts, topo, variant)
+        assert t == pytest.approx(dense_time(p, TPU_V5E), rel=1e-12)
+    assert sel.chosen == min(sel.modeled_times, key=sel.modeled_times.get)
+
+
+def test_single_region_geometry_has_no_hier():
+    assert dense_variants("allgatherv", Topology(8, 8)) == ["ring"]
+    assert dense_variants("allgatherv", Topology(8, 1)) == ["ring"]
+    assert "rd" in dense_variants("allreduce", Topology(8, 8))
+
+
+def test_dense_plan_cache_hits_and_saved_seconds():
+    cache = PlanCache()
+    topo = Topology(8, 4)
+    counts = uneven_counts(8)
+    plan1, sel1 = cache.dense_collective("allreduce", counts, topo)
+    ns = cache.snapshot()["namespaces"]["dense_plan"]
+    assert ns["entries"] == 1 and ns["misses"] == 1 and ns["hits"] == 0
+    plan2, sel2 = cache.dense_collective("allreduce", counts.copy(), topo)
+    ns = cache.snapshot()["namespaces"]["dense_plan"]
+    assert ns["hits"] == 1 and ns["entries"] == 1
+    assert plan2.fingerprint == plan1.fingerprint
+    assert sel2.chosen == sel1.chosen
+    # a different variant pin or counts vector is a different entry
+    cache.dense_collective("allreduce", counts, topo, variant="ring")
+    cache.dense_collective("allreduce", uneven_counts(8, seed=9), topo)
+    assert cache.snapshot()["namespaces"]["dense_plan"]["entries"] == 3
+
+
+def test_fingerprint_separates_collective_variant_counts_topology():
+    topo = Topology(8, 4)
+    counts = uneven_counts(8)
+    fps = {
+        dense_fingerprint("allreduce", counts, topo, "ring", 8),
+        dense_fingerprint("allreduce", counts, topo, "hier", 8),
+        dense_fingerprint("reduce_scatter", counts, topo, "ring", 8),
+        dense_fingerprint("allreduce", counts + 1, topo, "ring", 8),
+        dense_fingerprint("allreduce", counts, Topology(8, 2), "ring", 8),
+        dense_fingerprint("allreduce", counts, topo, "ring", 4),
+    }
+    assert len(fps) == 6
+    assert dense_fingerprint("allreduce", counts, topo, "ring", 8) \
+        == dense_fingerprint("allreduce", counts.tolist(), topo, "ring", 8)
+
+
+def test_fingerprint_stable_across_processes_and_hash_seeds():
+    """The determinism contract behind CI's PYTHONHASHSEED=0 pin: the
+    dense fingerprint is a pure content hash, so a fresh interpreter with
+    a DIFFERENT hash seed computes the identical digest."""
+    counts = np.array([5, 3, 7, 2, 9, 4, 6, 8])
+    fp = dense_fingerprint("allgatherv", counts, Topology(8, 4), "hier", 8)
+    prog = textwrap.dedent("""
+        import numpy as np
+        from repro.core import Topology, dense_fingerprint
+        counts = np.array([5, 3, 7, 2, 9, 4, 6, 8])
+        print(dense_fingerprint("allgatherv", counts, Topology(8, 4),
+                                "hier", 8))
+    """)
+    for seed in ("17", "4242"):
+        env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+                   PYTHONHASHSEED=seed)
+        out = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            cwd=REPO, env=env, check=True,
+        )
+        assert out.stdout.strip().splitlines()[-1] == fp, seed
+
+
+def test_grad_sync_config_validation():
+    from repro.train.trainer import TrainerConfig, jit_train_step
+
+    with pytest.raises(ValueError, match="make_dp_train_step"):
+        jit_train_step(object(), TrainerConfig(grad_sync="hier"))
+
+
+def test_stats_use_generic_cost_path():
+    """Dense rounds are named d0..dk — not the sparse step alphabet — so
+    stats_time must take the generic serial-sum path and stay positive
+    and additive in the round count."""
+    topo = Topology(8, 4)
+    counts = uneven_counts(8)
+    ring = build_dense_plan("allreduce", counts, topo, "ring")
+    assert all(s.name.startswith("d") for s in ring.stats.steps)
+    t = dense_time(ring, TPU_V5E)
+    assert np.isfinite(t) and t > 0
+    # doubling payload can't make the modeled time cheaper
+    big = build_dense_plan("allreduce", counts * 2, topo, "ring")
+    assert dense_time(big, TPU_V5E) >= t - 1e-15

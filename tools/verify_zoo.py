@@ -12,7 +12,13 @@ sweeps re-check partitions, ELL layouts, bucket maps and kernel budgets:
   whose SpGEMM gather patterns ride through the same cache;
 * ``repartition`` — the elastic rebuild onto a different device count;
 * ``moe_plan_for`` — every MoE dispatch mode (a2a / hier / hier_dedup and
-  the auto selector), plus the token-conservation check per plan.
+  the auto selector), plus the token-conservation check per plan;
+* ``PlanCache.dense_collective`` — the dense plan zoo: every collective
+  (allreduce / allgatherv / reduce_scatter) in every variant the
+  geometry admits (ring / rd / hier), on both 8-device geometries
+  (4 regions x 2 and 2 regions x 4), verified on insertion
+  (conflict-free rounds + symbolic conservation) with each bound
+  executor jaxpr-audited round-for-round against its schedule.
 
 Exit 0 with a per-producer summary, or the first ``VerifyError``
 propagates and fails the job with its rank/bucket diagnostic.
@@ -83,6 +89,25 @@ def main() -> int:
         verify_moe_dispatch(plan, tokens)
         moe_counts[mode] = plan.mode
     summary["moe"] = moe_counts
+
+    # -- dense collectives: every variant on both 8-device geometries ------
+    from repro.core import DENSE_COLLECTIVES, Topology
+    from repro.core.dense import dense_variants
+
+    dense_counts = {}
+    rng = np.random.default_rng(0)
+    for ppr in (2, 4):
+        topo = Topology(8, ppr)
+        for coll in DENSE_COLLECTIVES:
+            # uneven counts so conservation is checked on a ragged wire
+            counts = rng.integers(3, 17, size=8)
+            for variant in dense_variants(coll, topo) + ["auto"]:
+                plan, sel = cache.dense_collective(coll, counts, topo,
+                                                   variant=variant)
+                cache.dense_executor(plan, mesh, "proc")  # jaxpr audit
+                if variant == "auto":
+                    dense_counts[f"{coll}@ppr{ppr}"] = sel.chosen
+    summary["dense"] = dense_counts
 
     stats = cache.stats()
     print("verify_zoo: all plan producers verified")
